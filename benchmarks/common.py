@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: graph suite matched to the paper's structural
+regimes (Table 1) at CPU-tractable sizes, timing helpers, CSV emission."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (
+    Graph,
+    barabasi_albert_graph,
+    gnp_random_graph,
+    random_regular_graph,
+)
+
+
+@dataclass(frozen=True)
+class BenchGraph:
+    name: str
+    regime: str          # analogue from Table 1
+    graph: Graph
+
+
+def bench_suite(scale: float = 1.0) -> list[BenchGraph]:
+    """Three structural regimes the paper's analysis distinguishes (§6.3):
+    hub-heavy (Youtube/Twitter-like), uniform-degree (Friendster-like), and
+    small-diameter social (Orkut-like)."""
+    n1 = int(8_000 * scale)
+    n2 = int(6_000 * scale)
+    n3 = int(4_000 * scale)
+    return [
+        BenchGraph("ba-hub", "hub-heavy (Youtube/Twitter)",
+                   barabasi_albert_graph(n1, 3, seed=1)),
+        BenchGraph("reg-flat", "flat-degree small-diameter (Friendster)",
+                   random_regular_graph(n2, 8, seed=3)),
+        BenchGraph("gnp-social", "dense-social (Orkut)",
+                   gnp_random_graph(n3, 10.0, seed=2)),
+    ]
+
+
+def time_call(fn, *args, repeat: int = 3, **kw) -> tuple[float, object]:
+    out = fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return dt, out
+
+
+def sample_queries(graph: Graph, n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    us = rng.integers(0, graph.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, graph.n_vertices, size=n).astype(np.int32)
+    return us, vs
+
+
+def emit(rows: list[tuple]) -> None:
+    """CSV protocol required by the harness: name,us_per_call,derived."""
+    for name, us_per_call, derived in rows:
+        print(f"{name},{us_per_call:.3f},{derived}")

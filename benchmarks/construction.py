@@ -1,0 +1,69 @@
+"""Table 2 (left) + Figure 10: labelling construction time.
+
+QbS-P (batched-parallel BFS over landmarks — our TPU-native default) vs QbS
+(sequential per-landmark loop, the paper's single-thread analogue) vs PPL /
+ParentPPL (pruned path labelling; capped sizes — the paper's own result is
+that they DNF beyond small graphs, and their host-side cost here blows up
+the same way).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_labelling, select_landmarks
+from repro.core.baselines import PPLIndex
+
+from .common import bench_suite, emit, time_call
+
+PPL_CAP = 1_500
+PARENT_CAP = 600
+
+
+def qbs_sequential(graph, landmarks):
+    for lm in landmarks:
+        build_labelling(graph, np.asarray([lm], np.int32))
+
+
+def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
+    rows = []
+    for bg in bench_suite(scale):
+        g = bg.graph
+        landmarks = select_landmarks(g, 20)
+        dt, _ = time_call(lambda: build_labelling(g, landmarks), repeat=2)
+        rows.append((f"construction/qbs_p/{bg.name}", dt * 1e6,
+                     f"V={g.n_vertices};E={g.n_edges // 2};R=20"))
+        dt_seq, _ = time_call(lambda: qbs_sequential(g, landmarks), repeat=1)
+        rows.append((f"construction/qbs_seq/{bg.name}", dt_seq * 1e6,
+                     f"speedup_parallel={dt_seq / max(dt, 1e-9):.1f}x"))
+
+        if g.n_vertices <= PPL_CAP:
+            dt_p, _ = time_call(lambda: PPLIndex(g), repeat=1)
+            rows.append((f"construction/ppl/{bg.name}", dt_p * 1e6,
+                         f"vs_qbs={dt_p / max(dt, 1e-9):.0f}x"))
+        else:
+            rows.append((f"construction/ppl/{bg.name}", -1,
+                         f"DNF-analog:V>{PPL_CAP}"))
+        if g.n_vertices <= PARENT_CAP:
+            dt_pp, _ = time_call(lambda: PPLIndex(g, store_parents=True), repeat=1)
+            rows.append((f"construction/parentppl/{bg.name}", dt_pp * 1e6,
+                         f"vs_qbs={dt_pp / max(dt, 1e-9):.0f}x"))
+        else:
+            rows.append((f"construction/parentppl/{bg.name}", -1,
+                         f"DNF-analog:V>{PARENT_CAP}"))
+
+    if sweep:  # Figure 10: construction time vs |R|
+        g = bench_suite(scale)[0].graph
+        for r in (5, 10, 20, 40, 80):
+            lms = select_landmarks(g, r)
+            dt, _ = time_call(lambda: build_labelling(g, lms), repeat=2)
+            rows.append((f"construction/sweep_R{r}/ba-hub", dt * 1e6,
+                         "linear-in-R expected"))
+    return rows
+
+
+def main() -> None:
+    emit(run(sweep=True))
+
+
+if __name__ == "__main__":
+    main()

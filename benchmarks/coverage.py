@@ -1,0 +1,74 @@
+"""Figure 8: pair coverage ratios under varying landmark counts.
+
+Case (i): ALL shortest paths between the pair cross a landmark (equivalent
+to d_{G-}(u,v) > d_G(u,v)).  Case (ii): some but not all do.  The sketch
+can only guide queries with coverage, so these ratios explain QbS's
+per-dataset behaviour (§6.3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import INF, select_landmarks
+from repro.core.baselines import bfs_distances
+from repro.core.graph import Graph, from_edges
+
+from .common import bench_suite, emit, sample_queries
+
+N_PAIRS = 200
+
+
+def sparsify(graph: Graph, landmarks) -> Graph:
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    is_l = np.zeros(graph.n_vertices, bool)
+    is_l[np.asarray(landmarks)] = True
+    keep = ~is_l[src] & ~is_l[dst] & (src < dst)
+    return from_edges(np.stack([src[keep], dst[keep]], 1), graph.n_vertices)
+
+
+def coverage(graph: Graph, n_landmarks: int, seed: int = 0) -> tuple[float, float]:
+    landmarks = select_landmarks(graph, n_landmarks)
+    us, vs = sample_queries(graph, N_PAIRS, seed)
+    lm_d = np.stack([bfs_distances(graph, int(r)) for r in landmarks])  # (R, V)
+    g_minus = sparsify(graph, landmarks)
+    all_cross = 0
+    some_cross = 0
+    n_valid = 0
+    # distances in G- from each unique u (memoized)
+    memo: dict[int, np.ndarray] = {}
+    for u, v in zip(us, vs):
+        u, v = int(u), int(v)
+        du = bfs_distances(graph, u)
+        d = du[v]
+        if u == v or d >= INF:
+            continue
+        n_valid += 1
+        through = (lm_d[:, u] + lm_d[:, v] == d).any()
+        if not through:
+            continue
+        if u not in memo:
+            memo[u] = bfs_distances(g_minus, u)
+        if memo[u][v] > d:
+            all_cross += 1
+        else:
+            some_cross += 1
+    return all_cross / max(n_valid, 1), some_cross / max(n_valid, 1)
+
+
+def run(scale: float = 1.0) -> list[tuple]:
+    rows = []
+    for bg in bench_suite(scale * 0.5):
+        for r in (5, 10, 20, 40):
+            all_c, some_c = coverage(bg.graph, r)
+            rows.append((f"coverage/R{r}/{bg.name}", (all_c + some_c) * 100,
+                         f"all={all_c:.3f};some={some_c:.3f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

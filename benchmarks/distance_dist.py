@@ -1,0 +1,42 @@
+"""Figure 7: distance distribution of randomly sampled query pairs.
+Validates that the synthetic suite reproduces the paper's regime (most
+random pairs at distance 2-9 on complex networks)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import INF
+from repro.core.baselines import bfs_distances
+
+from .common import bench_suite, emit, sample_queries
+
+N_PAIRS = 300
+
+
+def run(scale: float = 1.0) -> list[tuple]:
+    rows = []
+    for bg in bench_suite(scale * 0.5):
+        us, vs = sample_queries(bg.graph, N_PAIRS, seed=11)
+        dists = []
+        memo = {}
+        for u, v in zip(us, vs):
+            u, v = int(u), int(v)
+            if u not in memo:
+                memo[u] = bfs_distances(bg.graph, u)
+            d = memo[u][v]
+            if u != v and d < INF:
+                dists.append(int(d))
+        hist = np.bincount(dists, minlength=12)[:12]
+        frac_2_9 = sum(hist[2:10]) / max(len(dists), 1)
+        rows.append((f"distance_dist/{bg.name}", float(np.mean(dists)) if dists else -1,
+                     "hist=" + "|".join(map(str, hist.tolist()))
+                     + f";frac2to9={frac_2_9:.2f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Table 3 + Figure 9: labelling sizes.
+
+size(L): |R| * 8 bits per vertex (paper's packing).  size(Delta): edges of
+precomputed landmark-to-landmark SPGs, derived from labels exactly as the
+recover search does.  Meta-graph size is bounded by |R|^2 entries.
+PPL/ParentPPL label-entry counts show the blowup the paper reports
+(hundreds of times larger).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import INF, build_labelling, labelling_size_bytes, select_landmarks
+from repro.core.baselines import PPLIndex
+
+from .common import bench_suite, emit
+
+PPL_CAP = 1_500
+PARENT_CAP = 600
+
+
+def delta_size_edges(graph, scheme) -> int:
+    """|Delta|: for every meta edge (i, j), count G- edges certified on a
+    landmark-free shortest r_i..r_j path (+ boundary hops)."""
+    ld = np.asarray(scheme.label_dist)
+    w = np.asarray(scheme.meta_w)
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    is_l = np.asarray(scheme.is_landmark)
+    gminus = ~is_l[src] & ~is_l[dst]
+    total = 0
+    r = w.shape[0]
+    for i in range(r):
+        for j in range(r):
+            if w[i, j] >= INF:
+                continue
+            cert = gminus & (ld[src, i] + 1 + ld[dst, j] == w[i, j])
+            total += int(cert.sum())
+            # boundary hops counted once per direction
+            lm_i = scheme.landmarks[i]
+            hop = (src == int(lm_i)) & (ld[dst, j] == w[i, j] - 1)
+            total += int(hop.sum())
+    return total // 2  # both orientations counted
+
+
+def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
+    rows = []
+    for bg in bench_suite(scale):
+        g = bg.graph
+        scheme = build_labelling(g, select_landmarks(g, 20))
+        sz = labelling_size_bytes(scheme)
+        graph_bytes = g.n_edges * 4  # paper: 8 bytes per undirected edge
+        rows.append((f"label_size/qbs_L/{bg.name}", sz["label_bytes"],
+                     f"ratio_to_graph={sz['label_bytes'] / graph_bytes:.3f}"))
+        d_edges = delta_size_edges(g, scheme)
+        rows.append((f"label_size/qbs_delta/{bg.name}", d_edges * 5,
+                     f"edges={d_edges}"))
+        rows.append((f"label_size/qbs_meta/{bg.name}", sz["meta_bytes"],
+                     f"meta_edges={sz['n_meta_edges']}"))
+        if g.n_vertices <= PPL_CAP:
+            ppl = PPLIndex(g)
+            rows.append((f"label_size/ppl/{bg.name}", ppl.memory_bytes(),
+                         f"entries={ppl.label_entries()};"
+                         f"x_qbs={ppl.memory_bytes() / max(sz['label_bytes'], 1):.0f}"))
+        else:
+            rows.append((f"label_size/ppl/{bg.name}", -1, f"DNF-analog:V>{PPL_CAP}"))
+        if g.n_vertices <= PARENT_CAP:
+            pp = PPLIndex(g, store_parents=True)
+            rows.append((f"label_size/parentppl/{bg.name}", pp.memory_bytes(),
+                         f"entries={pp.label_entries()}"))
+        else:
+            rows.append((f"label_size/parentppl/{bg.name}", -1,
+                         f"DNF-analog:V>{PARENT_CAP}"))
+
+    if sweep:  # Figure 9
+        g = bench_suite(scale)[0].graph
+        for r in (5, 10, 20, 40, 80):
+            scheme = build_labelling(g, select_landmarks(g, r))
+            sz = labelling_size_bytes(scheme)
+            rows.append((f"label_size/sweep_R{r}/ba-hub", sz["label_bytes"],
+                         f"meta_edges={sz['n_meta_edges']}"))
+    return rows
+
+
+def main() -> None:
+    emit(run(sweep=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Table 2 (right) + Figure 11: average query time.
+
+QbS (sketch + guided search, batched) vs Bi-BFS (the paper's search
+baseline) vs PPL / ParentPPL (recursive label queries, capped sizes).
+Times are per query, amortized over a batch — the TPU-native serving mode
+(DESIGN.md §2); Bi-BFS is batched identically so the comparison is fair.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import QbSIndex, select_landmarks
+from repro.core.baselines import PPLIndex, bibfs_spg_batch
+
+from .common import bench_suite, emit, sample_queries, time_call
+
+PPL_CAP = 1_500
+PARENT_CAP = 600
+N_QUERIES = 64
+
+
+def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
+    rows = []
+    for bg in bench_suite(scale):
+        g = bg.graph
+        us, vs = sample_queries(g, N_QUERIES, seed=7)
+        idx = QbSIndex.build(g, n_landmarks=20, chunk=32)
+        dt, res = time_call(lambda: idx.query_batch(us, vs), repeat=2)
+        per_q = dt / N_QUERIES
+        dists = [r.dist for r in res]
+        rows.append((f"query/qbs/{bg.name}", per_q * 1e6,
+                     f"avg_dist={np.mean([d for d in dists if d < 1 << 20]):.2f}"))
+
+        dt_b, _ = time_call(lambda: bibfs_spg_batch(g, us, vs), repeat=2)
+        rows.append((f"query/bibfs/{bg.name}", dt_b / N_QUERIES * 1e6,
+                     f"qbs_speedup={dt_b / max(dt, 1e-9):.2f}x"))
+
+        if g.n_vertices <= PPL_CAP:
+            ppl = PPLIndex(g)
+            dt_p, _ = time_call(
+                lambda: [ppl.query(int(u), int(v)) for u, v in zip(us[:16], vs[:16])],
+                repeat=1)
+            rows.append((f"query/ppl/{bg.name}", dt_p / 16 * 1e6, "host-recursive"))
+        else:
+            rows.append((f"query/ppl/{bg.name}", -1, f"DNF-analog:V>{PPL_CAP}"))
+        if g.n_vertices <= PARENT_CAP:
+            pp = PPLIndex(g, store_parents=True)
+            dt_pp, _ = time_call(
+                lambda: [pp.query(int(u), int(v)) for u, v in zip(us[:16], vs[:16])],
+                repeat=1)
+            rows.append((f"query/parentppl/{bg.name}", dt_pp / 16 * 1e6, "host-recursive"))
+        else:
+            rows.append((f"query/parentppl/{bg.name}", -1,
+                         f"DNF-analog:V>{PARENT_CAP}"))
+
+    if sweep:  # Figure 11: query time vs |R|
+        g = bench_suite(scale)[0].graph
+        us, vs = sample_queries(g, 32, seed=8)
+        for r in (5, 10, 20, 40):
+            idx = QbSIndex.build(g, n_landmarks=r, chunk=32)
+            dt, _ = time_call(lambda: idx.query_batch(us, vs), repeat=2)
+            rows.append((f"query/sweep_R{r}/ba-hub", dt / 32 * 1e6, ""))
+    return rows
+
+
+def main() -> None:
+    emit(run(sweep=True))
+
+
+if __name__ == "__main__":
+    main()

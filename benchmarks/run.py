@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV (us_per_call is bytes for the size
+benches, % for coverage, distance for distance_dist — the name prefix
+disambiguates; -1 means DNF-analog).
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graphs, no sweeps")
+    args = ap.parse_args()
+    scale = 0.25 if args.quick else args.scale
+    sweep = not args.quick
+
+    from . import construction, coverage, distance_dist, label_size, query_time, sketch_kernel
+    from .common import emit
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for mod, kw in (
+        (distance_dist, {}),
+        (construction, {"sweep": sweep}),
+        (label_size, {"sweep": sweep}),
+        (query_time, {"sweep": sweep}),
+        (coverage, {}),
+    ):
+        t = time.time()
+        emit(mod.run(scale=scale, **kw))
+        print(f"# {mod.__name__} done in {time.time() - t:.1f}s", file=sys.stderr)
+    emit(sketch_kernel.run())
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

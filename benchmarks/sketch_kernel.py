@@ -1,0 +1,51 @@
+"""Sketching fast-path microbench: batched d_top via min-plus contraction.
+
+Compares the pure-jnp reference against the Pallas kernel in interpret mode
+(CPU: correctness-path timing only — the interpreter is *slower* than XLA;
+the derived column carries the analytic VPU cost model for TPU v5e, which
+is what §Roofline consumes)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import INF, d_top_only
+from repro.kernels import minplus as minplus_pallas
+from repro.kernels.ref import minplus_ref
+
+from .common import emit, time_call
+
+
+def run() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for b, r in ((1024, 20), (4096, 20), (4096, 128)):
+        lu = jnp.asarray(
+            np.where(rng.random((b, r)) < 0.3, INF, rng.integers(1, 30, (b, r))),
+            jnp.int32)
+        lv = jnp.asarray(
+            np.where(rng.random((b, r)) < 0.3, INF, rng.integers(1, 30, (b, r))),
+            jnp.int32)
+        dm = jnp.asarray(rng.integers(1, 10, (r, r)), jnp.int32)
+
+        dt_ref, _ = time_call(
+            lambda: d_top_only(lu, lv, dm).block_until_ready(), repeat=5)
+        # analytic TPU cost: 2*B*R^2 int32 VPU ops / (~1e12 op/s VPU int lane)
+        vpu_us = 2 * b * r * r / 1e12 * 1e6
+        rows.append((f"sketch/jnp/B{b}_R{r}", dt_ref * 1e6,
+                     f"tpu_vpu_model_us={vpu_us:.3f}"))
+
+        dt_pl, _ = time_call(
+            lambda: minplus_pallas(lu, dm).block_until_ready(), repeat=2)
+        rows.append((f"sketch/pallas_interp/B{b}_R{r}", dt_pl * 1e6,
+                     "interpret-mode=correctness-path"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

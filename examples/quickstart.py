@@ -1,0 +1,31 @@
+"""Quickstart: build a QbS index and answer shortest-path-graph queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import QbSIndex, from_edges
+from repro.core.baselines import bfs_spg
+
+# The paper's Figure 3 graph (1-indexed in the paper).
+edges = np.array([(1, 2), (1, 3), (2, 4), (2, 5), (2, 6), (3, 4), (5, 6), (5, 7)]) - 1
+graph = from_edges(edges, 7)
+
+# Offline: labelling scheme (Algorithm 2) with 2 landmarks.
+index = QbSIndex.build(graph, n_landmarks=2)
+print("landmarks:", np.asarray(index.scheme.landmarks).tolist())
+print("meta-graph d_M:\n", np.asarray(index.scheme.meta_dist))
+
+# Online: SPG(3, 7) -> the sketch bounds the guided search (Algorithms 3+4).
+res = index.query(2, 6)  # paper's SPG(3,7), 0-indexed
+print(f"\nSPG(3,7): distance={res.dist}")
+print("edges:", sorted((a + 1, b + 1) for a, b in res.edge_pairs(graph)))
+
+oracle = bfs_spg(graph, 2, 6)
+assert res.edge_pairs(graph) == oracle.edge_pairs(graph)
+print("matches the two-BFS oracle: OK")
+
+# Batched serving: many queries per call.
+us, vs = np.array([0, 1, 3]), np.array([6, 6, 5])
+for r in index.query_batch(us, vs):
+    print(f"SPG({r.u + 1},{r.v + 1}): d={r.dist}, |E|={r.edge_ids.size // 2}")

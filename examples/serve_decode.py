@@ -1,0 +1,33 @@
+"""Batched LM serving example: prefill a prompt batch, then greedy-decode
+continuation tokens with bf16 and int8-quantized KV caches.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import greedy_generate
+
+cfg = get_config("phi3-medium-14b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (4, 32)).astype(np.int32)
+
+t0 = time.time()
+out_bf16 = greedy_generate(model, params, prompts, n_new=16)
+t1 = time.time()
+out_int8 = greedy_generate(model, params, prompts, n_new=16, kv_quant=True)
+t2 = time.time()
+
+print(f"bf16 KV: {out_bf16.shape} in {t1 - t0:.2f}s")
+print(f"int8 KV: {out_int8.shape} in {t2 - t1:.2f}s")
+agree = float((np.asarray(out_bf16) == np.asarray(out_int8)).mean())
+print(f"greedy-token agreement bf16 vs int8 KV: {agree * 100:.0f}% "
+      "(random-weight model; production models agree far more)")
+print("sample continuation (bf16):", np.asarray(out_bf16[0]).tolist())

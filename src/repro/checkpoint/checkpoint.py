@@ -1,0 +1,120 @@
+"""Checkpoint/restart with atomic rotation, async writes and elastic
+restore.
+
+Layout:  <root>/step_<N>/   leaf files  arr_<k>.npy  +  manifest.json
+         <root>/LATEST      (atomic pointer, written last)
+
+Crash safety: a checkpoint directory is staged under a tmp name and
+``os.rename``d into place (POSIX-atomic), then LATEST is rewritten; a
+killed writer can never leave a half checkpoint that restore would pick
+up — the preemption-simulation test exercises exactly this.
+
+Elastic restore: leaves are stored as full logical arrays with their
+treedef; the loader re-shards onto whatever mesh the restarted job has
+(checkpoints are mesh-shape-agnostic).  At 1000+-node scale the same
+manifest format fans out to per-shard files — single-file-per-leaf keeps
+this repo's footprint honest while preserving the protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(root: str | Path, step: int, tree: Any, *, extra: dict | None = None,
+         keep: int = 3) -> Path:
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:010d}"
+    tmp = root / f".tmp_step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(tree)
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)  # exact; restored via astype(bf16)
+        np.save(tmp / f"arr_{i:05d}.npy", arr)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    (root / ".LATEST_tmp").write_text(final.name)
+    os.rename(root / ".LATEST_tmp", root / "LATEST")
+
+    # rotation
+    ckpts = sorted(p for p in root.iterdir() if p.name.startswith("step_"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old)
+    return final
+
+
+def save_async(root: str | Path, step: int, tree: Any, **kw) -> threading.Thread:
+    """Device->host transfer happens synchronously (cheap), disk write in a
+    background thread so the train loop isn't blocked."""
+    host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(target=save, args=(root, step, host_tree), kwargs=kw)
+    t.start()
+    return t
+
+
+def latest_step(root: str | Path) -> int | None:
+    root = Path(root)
+    ptr = root / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (root / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(root: str | Path, example_tree: Any, *, step: int | None = None,
+            shardings: Any = None) -> tuple[int, Any, dict]:
+    """Restore into the structure of ``example_tree``; optionally re-shard
+    with a matching ``shardings`` pytree (elastic restore onto a new mesh)."""
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = root / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(example_tree)
+    assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+    out = []
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(leaves)
+    )
+    for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(d / f"arr_{i:05d}.npy")
+        want_dtype = manifest["dtypes"][i]
+        a = jax.numpy.asarray(arr).astype(want_dtype)
+        if shd is not None:
+            a = jax.device_put(a, shd)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return step, tree, manifest["extra"]

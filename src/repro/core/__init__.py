@@ -1,0 +1,45 @@
+"""Query-by-Sketch core: the paper's contribution as composable JAX modules."""
+from .graph import (
+    INF,
+    Graph,
+    barabasi_albert_graph,
+    from_edges,
+    gnp_random_graph,
+    grid_graph,
+    random_regular_graph,
+    largest_connected_component,
+    ring_of_cliques,
+    select_landmarks,
+    to_networkx,
+)
+from .labelling import LabellingScheme, build_labelling, labelling_size_bytes, meta_apsp
+from .qbs import QbSIndex, SPGResult
+from .search import Query, SearchContext, SearchResult, guided_search
+from .sketch import SketchBatch, compute_sketch_batch, d_top_only
+
+__all__ = [
+    "INF",
+    "Graph",
+    "barabasi_albert_graph",
+    "from_edges",
+    "gnp_random_graph",
+    "grid_graph",
+    "random_regular_graph",
+    "largest_connected_component",
+    "ring_of_cliques",
+    "select_landmarks",
+    "to_networkx",
+    "LabellingScheme",
+    "build_labelling",
+    "labelling_size_bytes",
+    "meta_apsp",
+    "QbSIndex",
+    "SPGResult",
+    "Query",
+    "SearchContext",
+    "SearchResult",
+    "guided_search",
+    "SketchBatch",
+    "compute_sketch_batch",
+    "d_top_only",
+]

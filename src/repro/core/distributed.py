@@ -1,0 +1,500 @@
+"""Distributed QbS: edge-sharded labelling and batch-sharded query serving.
+
+Mapping of the paper onto a TPU mesh (DESIGN.md §2, §5):
+
+* **Labelling** (offline): the |R| BFSs are one batched frontier program.
+  Edges are sharded across devices *by destination-vertex block* (blocks cut
+  at balanced edge counts, so hub-heavy blocks stay narrow); ``depth`` /
+  ``reach_L`` live vertex-sharded next to the edges that write them.  Each
+  level every device relays its local edges and the new frontier is
+  exchanged with one ``all_gather``.  Lemma 5.2 (order-independence) is what
+  makes the device-local relays commute — the merge is an exact OR/min.
+
+  Two exchange formats:
+    - ``frontier_mode="bool"``   : gather (2, R, V_loc) bool   (paper-faithful
+                                   straightforward port; 2 bytes/vertex/root)
+    - ``frontier_mode="bitmap"`` : gather (2, R, V_loc/32) uint32 packed
+                                   (beyond-paper: 16x fewer collective bytes)
+
+* **Serving** (online): queries are embarrassingly parallel — the batch is
+  sharded across the mesh, labels and the sparsified graph are replicated
+  within a pod.  Billion-vertex variants (labels vertex-sharded) are
+  exercised by the dry-run configs in ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import INF, Graph
+from .labelling import LabellingScheme, meta_apsp
+from .search import Query, SearchContext, guided_search
+from .sketch import compute_sketch_batch
+
+
+class EdgePartition(NamedTuple):
+    """Host-side edge partition into S destination-contiguous shards."""
+
+    src: np.ndarray        # (S, E_max) int32, global src ids (pad: 0)
+    dst_local: np.ndarray  # (S, E_max) int32, dst - vstart (pad: V_loc_max)
+    vstart: np.ndarray     # (S,) int32 first vertex of each shard's block
+    v_loc: int             # max local block size (padded)
+    e_max: int
+
+
+def partition_edges(graph: Graph, n_shards: int) -> EdgePartition:
+    """Cut vertices into contiguous blocks with ~equal *edge* counts (not
+    vertex counts) so degree skew doesn't create straggler shards, then
+    assign each directed edge to its destination's block."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    v = graph.n_vertices
+    order = np.argsort(dst, kind="stable")
+    dsorted = dst[order]
+    ssorted = src[order]
+    e = dst.shape[0]
+    # block boundaries at ~equal edge quantiles, snapped to vertex borders
+    cuts = [0]
+    for s in range(1, n_shards):
+        target = (e * s) // n_shards
+        vtx = dsorted[min(target, e - 1)]
+        cuts.append(int(vtx))
+    cuts.append(v)
+    vstart = np.maximum.accumulate(np.asarray(cuts[:-1], np.int64))
+    vend = np.concatenate([vstart[1:], [v]])
+    v_loc = int((vend - vstart).max()) if n_shards > 0 else v
+
+    starts = np.searchsorted(dsorted, vstart)
+    ends = np.searchsorted(dsorted, vend - 1, side="right")
+    # guard empty blocks
+    ends = np.maximum(ends, starts)
+    e_max = int((ends - starts).max())
+    e_max = max(e_max, 1)
+    src_sh = np.zeros((n_shards, e_max), np.int32)
+    dst_sh = np.full((n_shards, e_max), v_loc, np.int32)  # pad row = dropped
+    for s in range(n_shards):
+        a, b = starts[s], ends[s]
+        src_sh[s, : b - a] = ssorted[a:b]
+        dst_sh[s, : b - a] = dsorted[a:b] - vstart[s]
+    return EdgePartition(src_sh, dst_sh, vstart.astype(np.int32), v_loc, e_max)
+
+
+def _pack_bits(x: jax.Array) -> jax.Array:
+    """(..., N) bool -> (..., ceil(N/32)) uint32."""
+    n = x.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x = x.reshape(*x.shape[:-1], -1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (x * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_bits(x: jax.Array, n: int) -> jax.Array:
+    """(..., W) uint32 -> (..., n) bool."""
+    bits = (x[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    out = bits.reshape(*x.shape[:-1], -1)
+    return out[..., :n].astype(bool)
+
+
+def make_labelling_step(
+    mesh: Mesh,
+    *,
+    n_vertices: int,
+    v_loc: int,
+    e_max: int,
+    n_landmarks: int,
+    axis_names: tuple[str, ...] | None = None,
+    frontier_mode: str = "bitmap",
+    max_levels: int = 64,
+):
+    """Build the jitted edge-sharded labelling program.
+
+    Closes over *static* sizes only, so the dry-run can ``.lower()`` it from
+    ShapeDtypeStructs at paper scale (ClueWeb09: V=1.7e9, E=15.6e9 directed)
+    without allocating anything.  Landmark-ness is computed on the fly from
+    the (R,) landmark-id vector — no (V,)-sized auxiliary arrays exist.
+
+    Inputs: src_sh (S, E_max) int32, dst_local_sh (S, E_max) int32,
+            vstart_sh (S,) int32, landmarks (R,) int32
+    Outputs: depth (S, R, v_loc) int32, reach_L (S, R, v_loc) bool
+    """
+    axis_names = axis_names or tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    v = n_vertices
+    r = n_landmarks
+    vloc = v_loc
+    spec_e = P(axis_names)
+    rep = P()
+
+    def shard_body(src_sh, dst_sh, vstart_sh, landmarks_j):
+        # local shapes: src/dst (1, E_max) -> squeeze; vstart (1,)
+        src_l = src_sh[0]
+        dst_l = dst_sh[0]
+        vst = vstart_sh[0]
+
+        # local state (padded local block + 1 garbage row at index vloc)
+        depth = jnp.full((r, vloc + 1), INF, jnp.int32)
+        reach = jnp.zeros((r, vloc + 1), bool)
+        lm_local = landmarks_j - vst
+        own = (landmarks_j >= vst) & (lm_local < vloc)
+        lm_idx = jnp.where(own, lm_local, vloc)
+        depth = depth.at[jnp.arange(r), lm_idx].min(0)
+        reach = reach.at[jnp.arange(r), lm_idx].set(own)
+
+        local_ids = vst + jnp.arange(vloc, dtype=jnp.int32)
+        local_ids = jnp.clip(local_ids, 0, v - 1)
+        # landmark-ness on the fly: (R, vloc) root mask and its any-reduction
+        is_root_loc = local_ids[None, :] == landmarks_j[:, None]
+        is_lm_loc = is_root_loc.any(axis=0)
+        prop_ok = (~is_lm_loc)[None, :] | is_root_loc
+
+        # map global vertex id -> gathered layout index (shard, local)
+        vstart_all = jax.lax.all_gather(vstart_sh, axis_names, tiled=True)  # (S,)
+
+        def to_gathered(ids):
+            shard = jnp.clip(
+                jnp.searchsorted(vstart_all, ids, side="right") - 1, 0, n_shards - 1
+            )
+            return shard * vloc + (ids - vstart_all[shard])
+
+        src_g = to_gathered(src_l)
+
+        def exchange_and_read(fr_loc, pl_loc):
+            """All-gather the frontier and read it at local edge sources.
+
+            bitmap mode gathers uint32-packed words (16x fewer collective
+            bytes than bool x2 flags) and extracts per-edge bits directly —
+            the full boolean frontier is never materialized."""
+            both = jnp.stack([fr_loc, pl_loc])  # (2, R, vloc)
+            if frontier_mode == "bitmap":
+                packed = _pack_bits(both)                       # (2, R, Wloc)
+                wloc = packed.shape[-1]
+                full = jax.lax.all_gather(packed, axis_names, tiled=False)
+                full = jnp.moveaxis(full, 0, 2).reshape(2, r, n_shards * wloc)
+                sh_i = src_g // vloc
+                loc_i = src_g % vloc
+                w_idx = sh_i * wloc + loc_i // 32
+                bit = (loc_i % 32).astype(jnp.uint32)
+                words = full[:, :, w_idx]                       # (2, R, E)
+                vals = ((words >> bit[None, None, :]) & jnp.uint32(1)) > 0
+                return vals[0], vals[1]
+            full = jax.lax.all_gather(both, axis_names, tiled=False)
+            full = jnp.moveaxis(full, 0, 2).reshape(2, r, n_shards * vloc)
+            return full[0][:, src_g], full[1][:, src_g]
+
+        def cond(c):
+            _, _, level, alive = c
+            return alive & (level < max_levels)
+
+        def body(c):
+            depth, reach, level, _ = c
+            fr_loc = depth[:, :vloc] == level
+            pl_loc = fr_loc & reach[:, :vloc] & prop_ok
+            fr_src, pl_src = exchange_and_read(fr_loc, pl_loc)
+
+            msg_v = jax.ops.segment_max(
+                fr_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
+            ).T > 0
+            msg_l = jax.ops.segment_max(
+                pl_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
+            ).T > 0
+            new = msg_v & (depth == INF)
+            depth2 = jnp.where(new, level + 1, depth)
+            reach2 = reach | (new & msg_l)
+            # psum makes the flag globally agreed (required: the all_gather
+            # in the body must run the same trip count on every device);
+            # OR with a varying-false keeps the carry type device-varying.
+            alive = jax.lax.psum(new[:, :vloc].any().astype(jnp.int32), axis_names) > 0
+            alive = alive | (vst < 0)
+            return depth2, reach2, level + 1, alive
+
+        depth, reach, _, _ = jax.lax.while_loop(
+            cond, body, (depth, reach, vst * 0, vst == vst)
+        )
+        return depth[None, :, :vloc], reach[None, :, :vloc]
+
+    return jax.jit(
+        jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, rep),
+            out_specs=(spec_e, spec_e),
+        )
+    )
+
+
+class PullPlan(NamedTuple):
+    """Static routing plan for demand-driven frontier exchange.
+
+    The all-gather exchange moves 2*R*V/8 bytes/device/level, but a device
+    only ever reads the frontier bits of *its local edges' sources* —
+    typically ~E_loc of V vertices (50x less at ClueWeb09 scale).  The plan
+    precomputes, per (sender i, receiver j), the sorted list of i-owned
+    vertices that j needs; the exchange is then one all_to_all of packed
+    bit-buffers and per-edge reads become static word/bit lookups.
+    """
+
+    send_idx: np.ndarray   # (S, S, P) int32: [i][j] = local idx of vertices i sends j
+    edge_word: np.ndarray  # (S, E_max) int32: per-edge word into flat recv buffer
+    edge_bit: np.ndarray   # (S, E_max) int32: per-edge bit position
+    p_pad: int             # padded per-pair list length (multiple of 32)
+
+
+def build_pull_plan(part: EdgePartition, n_shards: int) -> PullPlan:
+    vstart = part.vstart.astype(np.int64)
+    s_cnt = n_shards
+    lists: list[list[np.ndarray]] = [[None] * s_cnt for _ in range(s_cnt)]  # type: ignore
+    p_max = 1
+    for j in range(s_cnt):
+        valid = part.dst_local[j] < part.v_loc
+        srcs = np.unique(part.src[j][valid])
+        owner = np.clip(np.searchsorted(vstart, srcs, side="right") - 1, 0, s_cnt - 1)
+        for i in range(s_cnt):
+            li = srcs[owner == i]
+            lists[i][j] = li
+            p_max = max(p_max, li.size)
+    p_pad = ((p_max + 31) // 32) * 32
+    pw = p_pad // 32
+
+    send_idx = np.zeros((s_cnt, s_cnt, p_pad), np.int32)
+    for i in range(s_cnt):
+        for j in range(s_cnt):
+            li = lists[i][j]
+            send_idx[i, j, : li.size] = (li - vstart[i]).astype(np.int32)
+
+    edge_word = np.zeros((s_cnt, part.e_max), np.int32)
+    edge_bit = np.zeros((s_cnt, part.e_max), np.int32)
+    for j in range(s_cnt):
+        valid = part.dst_local[j] < part.v_loc
+        srcs = part.src[j]
+        owner = np.clip(np.searchsorted(vstart, srcs, side="right") - 1, 0, s_cnt - 1)
+        pos = np.zeros(srcs.shape, np.int64)
+        for i in range(s_cnt):
+            sel = (owner == i) & valid
+            pos[sel] = np.searchsorted(lists[i][j], srcs[sel])
+        edge_word[j] = (owner * pw + pos // 32).astype(np.int32)
+        edge_bit[j] = (pos % 32).astype(np.int32)
+    return PullPlan(send_idx, edge_word, edge_bit, p_pad)
+
+
+def make_labelling_step_pull(
+    mesh: Mesh,
+    *,
+    n_vertices: int,
+    v_loc: int,
+    e_max: int,
+    p_pad: int,
+    n_landmarks: int,
+    axis_names: tuple[str, ...] | None = None,
+    max_levels: int = 64,
+):
+    """Labelling program with demand-driven (pull) frontier exchange."""
+    axis_names = axis_names or tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    v, r, vloc = n_vertices, n_landmarks, v_loc
+    pw = p_pad // 32
+    spec_e = P(axis_names)
+    rep = P()
+
+    def shard_body(src_sh, dst_sh, vstart_sh, landmarks_j,
+                   send_idx_sh, edge_word_sh, edge_bit_sh):
+        dst_l = dst_sh[0]
+        vst = vstart_sh[0]
+        send_idx = send_idx_sh[0]          # (S, P)
+        edge_word = edge_word_sh[0]        # (E,)
+        edge_bit = edge_bit_sh[0].astype(jnp.uint32)
+
+        depth = jnp.full((r, vloc + 1), INF, jnp.int32)
+        reach = jnp.zeros((r, vloc + 1), bool)
+        lm_local = landmarks_j - vst
+        own = (landmarks_j >= vst) & (lm_local < vloc)
+        lm_idx = jnp.where(own, lm_local, vloc)
+        depth = depth.at[jnp.arange(r), lm_idx].min(0)
+        reach = reach.at[jnp.arange(r), lm_idx].set(own)
+
+        local_ids = jnp.clip(vst + jnp.arange(vloc, dtype=jnp.int32), 0, v - 1)
+        is_root_loc = local_ids[None, :] == landmarks_j[:, None]
+        is_lm_loc = is_root_loc.any(axis=0)
+        prop_ok = (~is_lm_loc)[None, :] | is_root_loc
+
+        def exchange_and_read(fr_loc, pl_loc):
+            both = jnp.concatenate([fr_loc, pl_loc], axis=0)   # (2R, vloc)
+            vals = both[:, send_idx]                            # (2R, S, P)
+            packed = _pack_bits(vals)                           # (2R, S, Pw)
+            buf = jnp.moveaxis(packed, 1, 0)                    # (S, 2R, Pw)
+            recv = jax.lax.all_to_all(
+                buf, axis_names, split_axis=0, concat_axis=0, tiled=True)
+            flat = jnp.moveaxis(recv, 0, 1).reshape(2 * r, n_shards * pw)
+            words = flat[:, edge_word]                          # (2R, E)
+            bits = (words >> edge_bit[None, :]) & jnp.uint32(1)
+            on = bits > 0
+            return on[:r], on[r:]
+
+        def cond(c):
+            _, _, level, alive = c
+            return alive & (level < max_levels)
+
+        def body(c):
+            depth, reach, level, _ = c
+            fr_loc = depth[:, :vloc] == level
+            pl_loc = fr_loc & reach[:, :vloc] & prop_ok
+            fr_src, pl_src = exchange_and_read(fr_loc, pl_loc)
+            msg_v = jax.ops.segment_max(
+                fr_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
+            ).T > 0
+            msg_l = jax.ops.segment_max(
+                pl_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
+            ).T > 0
+            new = msg_v & (depth == INF)
+            depth2 = jnp.where(new, level + 1, depth)
+            reach2 = reach | (new & msg_l)
+            alive = jax.lax.psum(new[:, :vloc].any().astype(jnp.int32), axis_names) > 0
+            alive = alive | (vst < 0)
+            return depth2, reach2, level + 1, alive
+
+        depth, reach, _, _ = jax.lax.while_loop(
+            cond, body, (depth, reach, vst * 0, vst == vst)
+        )
+        return depth[None, :, :vloc], reach[None, :, :vloc]
+
+    return jax.jit(
+        jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, rep, spec_e, spec_e, spec_e),
+            out_specs=(spec_e, spec_e),
+        )
+    )
+
+
+def distributed_build_labelling(
+    graph: Graph,
+    landmarks: np.ndarray,
+    mesh: Mesh,
+    *,
+    axis_names: tuple[str, ...] | None = None,
+    frontier_mode: str = "bitmap",
+    max_levels: int = 64,
+) -> LabellingScheme:
+    """Edge-sharded Algorithm 2 over a device mesh.  Exact (== the
+    single-device labelling) for any shard count.  frontier_mode: "bool"
+    (paper-faithful port), "bitmap" (packed exchange), "pull" (demand-driven
+    all_to_all exchange)."""
+    axis_names = axis_names or tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    part = partition_edges(graph, n_shards)
+    v = graph.n_vertices
+    r = int(np.asarray(landmarks).shape[0])
+    landmarks_j = jnp.asarray(landmarks, jnp.int32)
+    is_landmark = jnp.zeros((v,), bool).at[landmarks_j].set(True)
+    lid = jnp.full((v,), -1, jnp.int32).at[landmarks_j].set(
+        jnp.arange(r, dtype=jnp.int32)
+    )
+
+    if frontier_mode == "pull":
+        plan = build_pull_plan(part, n_shards)
+        step = make_labelling_step_pull(
+            mesh, n_vertices=v, v_loc=part.v_loc, e_max=part.e_max,
+            p_pad=plan.p_pad, n_landmarks=r, axis_names=axis_names,
+            max_levels=max_levels,
+        )
+        depth_sh, reach_sh = step(
+            jnp.asarray(part.src), jnp.asarray(part.dst_local),
+            jnp.asarray(part.vstart), landmarks_j,
+            jnp.asarray(plan.send_idx), jnp.asarray(plan.edge_word),
+            jnp.asarray(plan.edge_bit),
+        )
+    else:
+        step = make_labelling_step(
+            mesh, n_vertices=v, v_loc=part.v_loc, e_max=part.e_max,
+            n_landmarks=r, axis_names=axis_names, frontier_mode=frontier_mode,
+            max_levels=max_levels,
+        )
+        depth_sh, reach_sh = step(
+            jnp.asarray(part.src), jnp.asarray(part.dst_local),
+            jnp.asarray(part.vstart), landmarks_j,
+        )
+
+    # host re-assembly into the canonical dense labelling
+    depth_np = np.asarray(depth_sh)   # (S, R, vloc)
+    reach_np = np.asarray(reach_sh)
+    depth_full = np.full((r, v), INF, np.int64)
+    reach_full = np.zeros((r, v), bool)
+    vstart = part.vstart
+    vend = np.concatenate([vstart[1:], [v]])
+    for s in range(depth_np.shape[0]):
+        n_loc = vend[s] - vstart[s]
+        depth_full[:, vstart[s]:vend[s]] = depth_np[s, :, :n_loc]
+        reach_full[:, vstart[s]:vend[s]] = reach_np[s, :, :n_loc]
+
+    is_lm_np = np.zeros((v,), bool)
+    is_lm_np[np.asarray(landmarks)] = True
+    valid = reach_full & ~is_lm_np[None, :]
+    label_dist = np.where(valid, depth_full, INF).T.astype(np.int32)
+    at_land = depth_full[:, np.asarray(landmarks)]
+    l_at_land = reach_full[:, np.asarray(landmarks)]
+    meta_w = np.where(l_at_land, at_land, INF)
+    np.fill_diagonal(meta_w, INF)
+    meta_w = np.minimum(meta_w, meta_w.T).astype(np.int32)
+
+    return LabellingScheme(
+        landmarks=landmarks_j,
+        lid=lid,
+        is_landmark=is_landmark,
+        label_dist=jnp.asarray(label_dist),
+        meta_w=jnp.asarray(meta_w),
+        meta_dist=meta_apsp(jnp.asarray(meta_w)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded batch serving
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(
+    ctx: SearchContext,
+    scheme: LabellingScheme,
+    mesh: Mesh,
+    *,
+    n_vertices: int,
+    axis_names: tuple[str, ...] | None = None,
+    max_levels: int = 64,
+    max_chain: int = 64,
+):
+    """Return a jitted serve step: (us, vs) batch -> (edge_mask, dist),
+    batch-sharded across the mesh, graph/labels replicated."""
+    axis_names = axis_names or tuple(mesh.axis_names)
+    searcher = partial(
+        guided_search, n_vertices=n_vertices,
+        max_levels=max_levels, max_chain=max_chain,
+    )
+
+    def step(ctx, label_dist, meta_w, meta_dist, us, vs):
+        lu = label_dist[us]
+        lv = label_dist[vs]
+        sk = compute_sketch_batch(lu, lv, meta_w, meta_dist)
+        queries = Query(
+            u=us, v=vs, d_top=sk.d_top, du_land=sk.du_land, dv_land=sk.dv_land,
+            meta_edge=sk.meta_edge, d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
+        )
+        res = jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
+        return res.edge_mask, res.dist
+
+    batch_spec = P(axis_names)
+    rep = P()
+    ctx_specs = SearchContext(*(rep for _ in ctx))
+    step_sharded = jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(ctx_specs, rep, rep, rep, batch_spec, batch_spec),
+        out_specs=(batch_spec, batch_spec),
+    )
+    fn = jax.jit(step_sharded)
+    return partial(fn, ctx, scheme.label_dist, scheme.meta_w, scheme.meta_dist)

@@ -1,0 +1,210 @@
+"""Fixed-shape CSR graph representation, builders and synthetic generators.
+
+The QbS engine operates on unweighted, undirected graphs stored as a
+symmetrized directed edge list (every undirected edge appears in both
+orientations) plus a CSR ``indptr``.  All shapes are static so every phase
+jits cleanly; padding uses self-loops on an isolated padding vertex, which
+are no-ops for level-synchronous BFS (a self loop re-delivers a message to
+an already-visited vertex).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Distance sentinel.  Small enough that INF + INF + INF fits int32 with room
+# to spare, large enough to exceed any real distance (max_levels <= 2**14).
+INF = 1 << 20
+INF_I32 = np.int32(INF)
+
+
+class Graph(NamedTuple):
+    """Symmetrized CSR graph. ``src``/``dst`` are sorted by ``src``."""
+
+    indptr: jax.Array  # (V+1,) int32
+    src: jax.Array     # (E,) int32
+    dst: jax.Array     # (E,) int32
+
+    @property
+    def n_vertices(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def n_edges(self) -> int:
+        """Directed edge-slot count (2x undirected edges + padding)."""
+        return int(self.src.shape[0])
+
+    def degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+
+def from_edges(
+    edges: np.ndarray,
+    n_vertices: int,
+    *,
+    pad_vertices_to: int | None = None,
+    pad_edges_to: int | None = None,
+) -> Graph:
+    """Build a symmetrized ``Graph`` from an (M, 2) undirected edge array.
+
+    Self-loops and duplicate edges are dropped.  Optional padding appends
+    isolated vertices and self-loop edge slots on the last padding vertex so
+    differently-sized test graphs share one jit cache entry.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    mask = edges[:, 0] != edges[:, 1]
+    edges = edges[mask]
+    if edges.size:
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        canon = np.unique(lo * np.int64(n_vertices) + hi)
+        lo = (canon // n_vertices).astype(np.int32)
+        hi = (canon % n_vertices).astype(np.int32)
+        s = np.concatenate([lo, hi])
+        d = np.concatenate([hi, lo])
+    else:
+        s = np.zeros((0,), np.int32)
+        d = np.zeros((0,), np.int32)
+
+    n_v = n_vertices
+    if pad_vertices_to is not None:
+        if pad_vertices_to < n_vertices:
+            raise ValueError("pad_vertices_to < n_vertices")
+        n_v = pad_vertices_to
+    n_e = s.shape[0]
+    if pad_edges_to is not None:
+        if pad_edges_to < n_e:
+            raise ValueError(f"pad_edges_to={pad_edges_to} < {n_e}")
+        pad_v = n_v - 1  # isolated when padding vertices were requested
+        extra = pad_edges_to - n_e
+        s = np.concatenate([s, np.full((extra,), pad_v, np.int32)])
+        d = np.concatenate([d, np.full((extra,), pad_v, np.int32)])
+
+    order = np.argsort(s, kind="stable")
+    s = s[order].astype(np.int32)
+    d = d[order].astype(np.int32)
+    indptr = np.zeros((n_v + 1,), np.int64)
+    np.add.at(indptr, s + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return Graph(jnp.asarray(indptr), jnp.asarray(s), jnp.asarray(d))
+
+
+def to_networkx(graph: Graph):
+    import networkx as nx
+
+    g = nx.Graph()
+    g.add_nodes_from(range(graph.n_vertices))
+    s = np.asarray(graph.src)
+    d = np.asarray(graph.dst)
+    real = s != d
+    g.add_edges_from(zip(s[real].tolist(), d[real].tolist()))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Generators (host-side; the data pipeline is host code in real frameworks).
+# ---------------------------------------------------------------------------
+
+def gnp_random_graph(n: int, avg_degree: float, seed: int, **pad) -> Graph:
+    """Erdos-Renyi-ish sparse sampler: E = n*avg_degree/2 sampled pairs."""
+    rng = np.random.default_rng(seed)
+    m = max(1, int(n * avg_degree / 2))
+    edges = rng.integers(0, n, size=(m, 2), dtype=np.int64)
+    return from_edges(edges, n, **pad)
+
+
+def barabasi_albert_graph(n: int, m: int, seed: int, **pad) -> Graph:
+    """Preferential-attachment generator (hub-heavy, matches social/web
+    regimes of the paper: Twitter/Youtube-like degree skew)."""
+    rng = np.random.default_rng(seed)
+    m = max(1, min(m, n - 1))
+    targets = list(range(m))
+    repeated: list[int] = []
+    edges = []
+    for v in range(m, n):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        # sample next targets from the degree-weighted multiset
+        idx = rng.integers(0, len(repeated), size=(m,))
+        targets = list({repeated[i] for i in idx})
+        while len(targets) < m:
+            targets.append(int(rng.integers(0, v + 1)))
+    return from_edges(np.asarray(edges, np.int64), n, **pad)
+
+
+def random_regular_graph(n: int, degree: int, seed: int, **pad) -> Graph:
+    """~degree-regular random graph via unions of random matchings:
+    flat degree distribution AND small diameter — the Friendster regime
+    (ring_of_cliques is flat-degree but long-diameter; keep it for tests)."""
+    rng = np.random.default_rng(seed)
+    edges = []
+    for _ in range(max(1, degree // 2)):
+        perm = rng.permutation(n)
+        edges.append(np.stack([np.arange(n), perm], axis=1))
+    return from_edges(np.concatenate(edges), n, **pad)
+
+
+def ring_of_cliques(n_cliques: int, clique_size: int, seed: int = 0, **pad) -> Graph:
+    """Flat-degree, long-diameter stress regime (tests)."""
+    edges = []
+    n = n_cliques * clique_size
+    for c in range(n_cliques):
+        base = c * clique_size
+        for i in range(clique_size):
+            for j in range(i + 1, clique_size):
+                edges.append((base + i, base + j))
+        nxt = ((c + 1) % n_cliques) * clique_size
+        edges.append((base, nxt))
+    return from_edges(np.asarray(edges, np.int64), n, **pad)
+
+
+def grid_graph(rows: int, cols: int, **pad) -> Graph:
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                edges.append((v, v + 1))
+            if r + 1 < rows:
+                edges.append((v, v + cols))
+    return from_edges(np.asarray(edges, np.int64), rows * cols, **pad)
+
+
+def largest_connected_component(edges: np.ndarray, n: int) -> tuple[np.ndarray, int]:
+    """Relabel ``edges`` to the largest connected component. Host-side."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    parent = np.arange(n)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for a, b in edges:
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[ra] = rb
+    roots = np.array([find(i) for i in range(n)])
+    vals, counts = np.unique(roots, return_counts=True)
+    big = vals[np.argmax(counts)]
+    keep = roots == big
+    remap = -np.ones(n, np.int64)
+    remap[keep] = np.arange(keep.sum())
+    mask = keep[edges[:, 0]] & keep[edges[:, 1]]
+    out = remap[edges[mask]]
+    return out, int(keep.sum())
+
+
+def select_landmarks(graph: Graph, n_landmarks: int) -> np.ndarray:
+    """Paper's strategy: highest-degree vertices (§6.1 Landmarks)."""
+    deg = np.asarray(graph.degrees())
+    order = np.argsort(-deg, kind="stable")
+    return np.sort(order[:n_landmarks]).astype(np.int32)

@@ -1,0 +1,159 @@
+"""Algorithm 2 (labelling scheme construction), batched over landmarks.
+
+The paper runs one BFS per landmark with two queues: ``Q_L`` (vertices
+reached via a shortest path whose interior avoids all landmarks -> get a
+label) and ``Q_N`` (reached only through some landmark -> no label).  We run
+all |R| BFSs as a single level-synchronous frontier program over state
+
+    depth[R, V]    BFS depth per landmark root (INF = unvisited)
+    reach_L[R, V]  "exists a shortest path from root r whose interior
+                    contains no landmark" (the Q_L membership bit)
+
+Per level every edge relays two messages: *visited* (from any frontier
+vertex) and *L* (only from frontier vertices allowed as path interior:
+non-landmarks, or the root itself).  Q_L-before-Q_N priority at equal depth
+in the paper is exactly the OR over same-level predecessors here.
+
+Determinism (Lemma 5.2) is structural: the program never depends on a
+landmark order, which is what licenses batching/vmapping the BFSs — the
+TPU analogue of the paper's thread-level parallelism (§5.3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import INF, Graph
+
+
+class LabellingScheme(NamedTuple):
+    """Labelling scheme L = (M, L) of Definition 4.2 in dense form."""
+
+    landmarks: jax.Array    # (R,) int32 vertex ids
+    lid: jax.Array          # (V,) int32 vertex -> landmark index, -1 otherwise
+    is_landmark: jax.Array  # (V,) bool
+    label_dist: jax.Array   # (V, R) int32; INF where no label entry exists
+    meta_w: jax.Array       # (R, R) int32 meta-graph edge weights sigma; INF = no edge
+    meta_dist: jax.Array    # (R, R) int32 APSP distances d_M on the meta-graph
+
+    @property
+    def n_landmarks(self) -> int:
+        return int(self.landmarks.shape[0])
+
+    def label_valid(self) -> jax.Array:
+        return self.label_dist < INF
+
+
+def _edge_or(values_at_src: jax.Array, dst: jax.Array, n_vertices: int) -> jax.Array:
+    """OR-reduce per-edge boolean messages (R, E) into their dst: (R, V)."""
+    acc = jax.ops.segment_max(
+        values_at_src.astype(jnp.int32).T, dst, num_segments=n_vertices
+    )
+    return (acc > 0).T
+
+
+@partial(jax.jit, static_argnames=("n_vertices", "max_levels"))
+def _build_labelling_arrays(
+    src: jax.Array,
+    dst: jax.Array,
+    landmarks: jax.Array,
+    is_landmark: jax.Array,
+    n_vertices: int,
+    max_levels: int,
+):
+    R = landmarks.shape[0]
+    V = n_vertices
+
+    depth0 = jnp.full((R, V), INF, jnp.int32).at[jnp.arange(R), landmarks].set(0)
+    reach0 = jnp.zeros((R, V), bool).at[jnp.arange(R), landmarks].set(True)
+    # roots may relay L-messages even though they are landmarks
+    is_root = jnp.zeros((R, V), bool).at[jnp.arange(R), landmarks].set(True)
+    propagate_ok = (~is_landmark)[None, :] | is_root
+
+    def cond(carry):
+        _, _, level, alive = carry
+        return alive & (level < max_levels)
+
+    def body(carry):
+        depth, reach_l, level, _ = carry
+        frontier = depth == level
+        prop_l = frontier & reach_l & propagate_ok
+        msg_vis = _edge_or(frontier[:, src], dst, V)
+        msg_l = _edge_or(prop_l[:, src], dst, V)
+        new = msg_vis & (depth == INF)
+        depth = jnp.where(new, level + 1, depth)
+        reach_l = reach_l | (new & msg_l)
+        return depth, reach_l, level + 1, new.any()
+
+    depth, reach_l, _, _ = jax.lax.while_loop(
+        cond, body, (depth0, reach0, jnp.int32(0), jnp.bool_(True))
+    )
+
+    # Labels only for non-landmarks reached via a landmark-free path.
+    valid = reach_l & (~is_landmark)[None, :]
+    label_dist = jnp.where(valid, depth, INF).T.astype(jnp.int32)  # (V, R)
+
+    # Meta edge (r_i, r_j) iff landmark j was reached from root i with the
+    # L-bit set; weight = its BFS depth = d_G(r_i, r_j).
+    at_land = depth[:, landmarks]          # (R, R)
+    l_at_land = reach_l[:, landmarks]      # (R, R)
+    meta_w = jnp.where(l_at_land, at_land, INF)
+    meta_w = meta_w.at[jnp.arange(R), jnp.arange(R)].set(INF)  # no self edges
+    # Determinism gives symmetry; enforce it to kill numeric asymmetry risk.
+    meta_w = jnp.minimum(meta_w, meta_w.T)
+
+    meta_dist = meta_apsp(meta_w)
+    return label_dist, meta_w, meta_dist
+
+
+def meta_apsp(meta_w: jax.Array) -> jax.Array:
+    """Min-plus APSP (Floyd-Warshall) on the meta-graph. d_M == d_G between
+    landmarks (meta edges are exact distances; every landmark-to-landmark
+    shortest path splits at its interior landmarks into meta edges)."""
+    R = meta_w.shape[0]
+    d0 = jnp.minimum(meta_w, INF).at[jnp.arange(R), jnp.arange(R)].set(0)
+
+    def body(k, d):
+        cand = d[:, k][:, None] + d[k, :][None, :]
+        return jnp.minimum(d, cand)
+
+    d = jax.lax.fori_loop(0, R, body, d0)
+    return jnp.minimum(d, INF)
+
+
+def build_labelling(
+    graph: Graph, landmarks: np.ndarray, *, max_levels: int = 256
+) -> LabellingScheme:
+    landmarks = jnp.asarray(landmarks, jnp.int32)
+    R = int(landmarks.shape[0])
+    V = graph.n_vertices
+    is_landmark = jnp.zeros((V,), bool).at[landmarks].set(True)
+    lid = jnp.full((V,), -1, jnp.int32).at[landmarks].set(jnp.arange(R, dtype=jnp.int32))
+    label_dist, meta_w, meta_dist = _build_labelling_arrays(
+        graph.src, graph.dst, landmarks, is_landmark, V, max_levels
+    )
+    return LabellingScheme(
+        landmarks=landmarks,
+        lid=lid,
+        is_landmark=is_landmark,
+        label_dist=label_dist,
+        meta_w=meta_w,
+        meta_dist=meta_dist,
+    )
+
+
+def labelling_size_bytes(scheme: LabellingScheme) -> dict:
+    """Paper's size accounting (§6.1): |R| * 8 bits per vertex for L, plus
+    the meta-graph.  Distances on complex networks fit 8 bits."""
+    v = int(scheme.label_dist.shape[0])
+    r = scheme.n_landmarks
+    n_meta = int(np.asarray((scheme.meta_w < INF).sum()))
+    return {
+        "label_bytes": v * r,                # 8 bits per (vertex, landmark)
+        "meta_bytes": n_meta * (4 + 1),      # (pair id, weight)
+        "n_meta_edges": n_meta,
+    }

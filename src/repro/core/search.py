@@ -1,0 +1,319 @@
+"""Algorithm 4 (guided searching): sketch-bounded bidirectional BFS on the
+sparsified graph G- = G[V \\ R], then a reverse search (extract the SPG edges
+avoiding landmarks) and a recover search (re-attach shortest paths through
+landmarks from the labelling).
+
+TPU adaptation notes (see DESIGN.md §2):
+
+* Queues -> level-synchronous frontier masks; every step is an edge-parallel
+  ``segment_max`` relay, so hub vertices never serialize a lane.
+* The paper's recover search walks pointers from anchor set Z.  Here the
+  labels act as *global* distance certificates, which turns most of the walk
+  into a single pointwise test:  a vertex x lies on a landmark-free shortest
+  u->r path iff  depth_u[x] + delta_xr == sigma_S(u, r)  (compose the G- BFS
+  prefix with the label suffix).  Only the part of a path *beyond* the
+  explored ball needs the paper's anchor chain, which we run as a masked
+  OR-closure over label levels (``while_loop``, trip count <= diameter).
+* Landmark-to-landmark segments (the paper's precomputed Delta) need no
+  search at all: both endpoints of an edge carry label certificates, so
+  Delta is one min-plus contraction over the sketch's meta edges.
+
+Everything is fixed-shape and vmap-able over a query batch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import INF
+
+
+class SearchContext(NamedTuple):
+    """Per-graph constants shared by every query."""
+
+    src: jax.Array          # (E,) int32
+    dst: jax.Array          # (E,) int32
+    gminus_e: jax.Array     # (E,) bool: both endpoints are non-landmarks
+    is_landmark: jax.Array  # (V,) bool
+    lid: jax.Array          # (V,) int32: vertex -> landmark index, -1 otherwise
+    label_dist: jax.Array   # (V, R) int32, INF = no entry
+    meta_w: jax.Array       # (R, R) int32 direct meta edge weights
+
+
+class Query(NamedTuple):
+    """One query + its sketch (leading axis = batch under vmap)."""
+
+    u: jax.Array          # () int32
+    v: jax.Array          # () int32
+    d_top: jax.Array      # () int32
+    du_land: jax.Array    # (R,) int32 sigma_S(u, r)
+    dv_land: jax.Array    # (R,) int32 sigma_S(v, r')
+    meta_edge: jax.Array  # (R, R) bool
+    d_star_u: jax.Array   # () int32
+    d_star_v: jax.Array   # () int32
+
+
+class SearchResult(NamedTuple):
+    edge_mask: jax.Array  # (E,) bool, path-direction orientation marks
+    dist: jax.Array       # () int32, INF if disconnected
+    d_minus: jax.Array    # () int32 d_{G-}(u, v), INF if balls never met
+    d_u: jax.Array        # () int32 explored radius, u side
+    d_v: jax.Array        # () int32 explored radius, v side
+
+
+def _scatter_or(values: jax.Array, key: jax.Array, n: int) -> jax.Array:
+    """OR-reduce per-edge bools (E,) into vertices keyed by ``key``: (V,)."""
+    return jax.ops.segment_max(values.astype(jnp.int32), key, num_segments=n) > 0
+
+
+def _scatter_or2(values: jax.Array, key: jax.Array, n: int) -> jax.Array:
+    """(E, R) bool -> (V, R) bool OR-reduction keyed by ``key``."""
+    return jax.ops.segment_max(values.astype(jnp.int32), key, num_segments=n) > 0
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: sketch-bounded bidirectional BFS on G-  (Alg. 4 lines 1-15)
+# ---------------------------------------------------------------------------
+
+def bidirectional_bfs(ctx: SearchContext, q: Query, n_vertices: int, max_levels: int):
+    V = n_vertices
+    depth_u = jnp.full((V,), INF, jnp.int32).at[q.u].set(0)
+    depth_v = jnp.full((V,), INF, jnp.int32).at[q.v].set(0)
+
+    def cond(c):
+        depth_u, depth_v, d_u, d_v, alive_u, alive_v, met = c
+        more = (d_u + d_v < q.d_top) & (d_u + d_v < max_levels)
+        return more & (~met) & (alive_u | alive_v)
+
+    def body(c):
+        depth_u, depth_v, d_u, d_v, alive_u, alive_v, met = c
+        # pick_search: prefer the side whose sketch budget d* is unmet; on a
+        # tie use the smaller explored ball (paper's |P_u| vs |P_v| rule).
+        want_u = q.d_star_u > d_u
+        want_v = q.d_star_v > d_v
+        size_u = jnp.sum(depth_u < INF)
+        size_v = jnp.sum(depth_v < INF)
+        pick_u = jnp.where(
+            want_u != want_v, want_u, size_u <= size_v
+        )
+        pick_u = jnp.where(alive_u & alive_v, pick_u, alive_u)
+
+        def expand(depth, d):
+            frontier = depth == d
+            msg = _scatter_or(frontier[ctx.src] & ctx.gminus_e, ctx.dst, V)
+            new = msg & (depth == INF)
+            return jnp.where(new, d + 1, depth), d + 1, new.any()
+
+        du2, dcu, au2 = expand(depth_u, d_u)
+        dv2, dcv, av2 = expand(depth_v, d_v)
+        depth_u = jnp.where(pick_u, du2, depth_u)
+        depth_v = jnp.where(pick_u, depth_v, dv2)
+        d_u = jnp.where(pick_u, dcu, d_u)
+        d_v = jnp.where(pick_u, d_v, dcv)
+        alive_u = jnp.where(pick_u, au2, alive_u)
+        alive_v = jnp.where(pick_u, alive_v, av2)
+        met = jnp.any((depth_u < INF) & (depth_v < INF))
+        return depth_u, depth_v, d_u, d_v, alive_u, alive_v, met
+
+    # Carry scalars are derived from query data (not literals) so their
+    # varying-manual-axes type matches the loop outputs under shard_map.
+    true_ = q.u == q.u
+    zero = q.u * 0
+    init = (depth_u, depth_v, zero, zero, true_, true_, ~true_)
+    return jax.lax.while_loop(cond, body, init)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: reverse search  (Alg. 4 lines 16-17)
+# ---------------------------------------------------------------------------
+
+def reverse_search(ctx: SearchContext, depth_u, depth_v, d_minus, n_vertices: int):
+    """Extract the SPG edges of shortest u-v paths inside G-.
+
+    Pointwise certification with *partial* balls only covers the two levels
+    adjacent to the meeting cut, so we chain backward from the meeting set
+    W = {x : depth_u[x] + depth_v[x] == d_minus} on each side.  Certified
+    edges are oriented along the u->v path direction.
+    """
+    V = n_vertices
+    common = (depth_u < INF) & (depth_v < INF)
+    w_set = common & (depth_u + depth_v == d_minus)
+
+    def sweep(depth, toward_u: bool):
+        # walk from W back to the endpoint, level by level
+        start_level = jnp.max(jnp.where(w_set, depth, 0))
+
+        def cond(c):
+            _, _, l = c
+            return l >= 1
+
+        def body(c):
+            on, emask, l = c
+            if toward_u:
+                # certify (x -> y) with depth[x] == l-1, depth[y] == l, y on-path
+                cert = (
+                    ctx.gminus_e
+                    & on[ctx.dst]
+                    & (depth[ctx.dst] == l)
+                    & (depth[ctx.src] == l - 1)
+                )
+                on = on | _scatter_or(cert, ctx.src, V)
+            else:
+                # certify (x -> y) with depth_v[x] == l, depth_v[y] == l-1
+                cert = (
+                    ctx.gminus_e
+                    & on[ctx.src]
+                    & (depth[ctx.src] == l)
+                    & (depth[ctx.dst] == l - 1)
+                )
+                on = on | _scatter_or(cert, ctx.dst, V)
+            return on, emask | cert, l - 1
+
+        on0 = w_set
+        emask0 = w_set[ctx.src] & ~w_set[ctx.src]  # all-False, varying-typed
+        _, emask, _ = jax.lax.while_loop(cond, body, (on0, emask0, start_level))
+        return emask
+
+    return sweep(depth_u, True) | sweep(depth_v, False)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: recover search  (Alg. 4 lines 18-24)
+# ---------------------------------------------------------------------------
+
+def _side_attach(ctx: SearchContext, depth, side_land, n_vertices: int, max_chain: int):
+    """Component (i)/(ii): edges of landmark-free shortest t->r paths for
+    every sketch edge (r, t), vectorized over all landmarks r at once.
+
+    Returns (edge_mask, on) where on[x, r] certifies x on such a path.
+    """
+    V = n_vertices
+    ld = ctx.label_dist
+    lvalid = ld < INF
+    sigma = side_land  # (R,)
+
+    # Pointwise certificate: G- BFS prefix + label suffix == sigma.
+    on = (
+        lvalid
+        & (depth[:, None] < INF)
+        & (sigma[None, :] < INF)
+        & (depth[:, None] + ld == sigma[None, :])
+    )
+
+    # Anchor-chain closure for path segments beyond the explored ball
+    # (paper's Z-walk): extend along label-decrement edges in G-.
+    def cond(c):
+        _, changed, it = c
+        return changed & (it < max_chain)
+
+    def body(c):
+        on, _, it = c
+        relay = (
+            ctx.gminus_e[:, None]
+            & on[ctx.src]
+            & lvalid[ctx.dst]
+            & (ld[ctx.dst] == ld[ctx.src] - 1)
+        )
+        grown = _scatter_or2(relay, ctx.dst, V)
+        new_on = on | grown
+        changed = jnp.any(new_on & ~on)
+        return new_on, changed, it + 1
+
+    t = jnp.any(on)
+    on, _, _ = jax.lax.while_loop(cond, body, (on, t | ~t, t.astype(jnp.int32) * 0))
+
+    # Interior edges: both endpoints certified, label distance decrements.
+    interior = ctx.gminus_e & jnp.any(
+        on[ctx.src] & on[ctx.dst] & (ld[ctx.dst] == ld[ctx.src] - 1), axis=1
+    )
+
+    # Final hops into the landmark (both orientations of the same edge).
+    def hop(edge_end, other_end):
+        r_idx = jnp.clip(ctx.lid[edge_end], 0, None)
+        valid = ctx.is_landmark[edge_end]
+        on_o = jnp.take_along_axis(on[other_end], r_idx[:, None], axis=1)[:, 0]
+        ld_o = jnp.take_along_axis(ld[other_end], r_idx[:, None], axis=1)[:, 0]
+        return valid & on_o & (ld_o == 1)
+
+    hops = hop(ctx.dst, ctx.src) | hop(ctx.src, ctx.dst)
+    return interior | hops, on
+
+
+def _delta_edges(ctx: SearchContext, meta_edge, n_vertices: int):
+    """Component (iii): edges on landmark-free shortest r_i - r_j paths for
+    every meta edge in the sketch (the paper's precomputed Delta), derived
+    from labels alone via a min-plus contraction.
+
+    For a G- edge (x, y):  on path iff  exists (i,j) in sketch meta edges:
+        ld[x,i] + 1 + ld[y,j] == w[i,j]
+    By the triangle inequality ld[x,i] + ld[y,j] - w[i,j] >= -1, so the
+    existential test is  min_{i,j} masked(ld[x,i] + ld[y,j] - w[i,j]) == -1.
+    """
+    ld = ctx.label_dist
+    w = ctx.meta_w
+    fin = (w < INF) & meta_edge
+
+    # T[x, i] = min_j ( ld[x, j] + (-w[i, j] | INF) )
+    m2 = jnp.where(fin, -w, INF).T.astype(jnp.int32)        # (j, i)
+    t = jnp.min(ld[:, :, None] + m2[None, :, :], axis=1)    # (V, R_i)
+    minval = jnp.min(ld[ctx.src] + t[ctx.dst], axis=1)      # (E,)
+    interior = ctx.gminus_e & (minval == -1)
+
+    # Boundary hops r_i -> y (y has ld[y, j] == w[i,j]-1) and x -> r_j.
+    g1 = jnp.where(fin, w - 1, -1)          # (i, j) row-indexed by src landmark
+    h1 = jnp.where(fin, w - 1, -1).T        # (j, i) row-indexed by dst landmark
+
+    def hop(end_land, end_other, table):
+        r_idx = jnp.clip(ctx.lid[end_land], 0, None)
+        valid = ctx.is_landmark[end_land] & ~ctx.is_landmark[end_other]
+        targets = table[r_idx]              # (E, R)
+        match = jnp.any(ld[end_other] == targets, axis=1)
+        return valid & match
+
+    hops = hop(ctx.src, ctx.dst, g1) | hop(ctx.dst, ctx.src, h1)
+
+    # Direct landmark-landmark sketch edges of weight 1.
+    both = ctx.is_landmark[ctx.src] & ctx.is_landmark[ctx.dst]
+    i_idx = jnp.clip(ctx.lid[ctx.src], 0, None)
+    j_idx = jnp.clip(ctx.lid[ctx.dst], 0, None)
+    direct = both & meta_edge[i_idx, j_idx] & (w[i_idx, j_idx] == 1)
+
+    return interior | hops | direct
+
+
+def recover_search(ctx: SearchContext, q: Query, depth_u, depth_v,
+                   n_vertices: int, max_chain: int):
+    e_u, _ = _side_attach(ctx, depth_u, q.du_land, n_vertices, max_chain)
+    e_v, _ = _side_attach(ctx, depth_v, q.dv_land, n_vertices, max_chain)
+    e_m = _delta_edges(ctx, q.meta_edge, n_vertices)
+    return e_u | e_v | e_m
+
+
+# ---------------------------------------------------------------------------
+# Full guided search for one query
+# ---------------------------------------------------------------------------
+
+def guided_search(ctx: SearchContext, q: Query, n_vertices: int,
+                  max_levels: int = 64, max_chain: int = 64) -> SearchResult:
+    depth_u, depth_v, d_u, d_v, _, _, met = bidirectional_bfs(
+        ctx, q, n_vertices, max_levels
+    )
+
+    common = (depth_u < INF) & (depth_v < INF)
+    sums = jnp.where(common, depth_u + depth_v, INF)
+    d_minus = jnp.min(sums)
+
+    dist = jnp.minimum(d_minus, q.d_top)
+    reverse_on = met & (d_minus <= q.d_top)
+    recover_on = (q.d_top < INF) & (q.d_top <= d_minus)
+
+    e_rev = reverse_search(ctx, depth_u, depth_v, d_minus, n_vertices)
+    e_rec = recover_search(ctx, q, depth_u, depth_v, n_vertices, max_chain)
+
+    trivial = q.u == q.v
+    edge_mask = ((e_rev & reverse_on) | (e_rec & recover_on)) & ~trivial
+    dist = jnp.where(trivial, 0, dist)
+    return SearchResult(edge_mask=edge_mask, dist=dist.astype(jnp.int32),
+                        d_minus=d_minus.astype(jnp.int32), d_u=d_u, d_v=d_v)

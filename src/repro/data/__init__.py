@@ -1,0 +1,3 @@
+from .pipeline import FileBackedLM, Prefetcher, SyntheticLM, SyntheticLMConfig
+
+__all__ = ["FileBackedLM", "Prefetcher", "SyntheticLM", "SyntheticLMConfig"]

@@ -1,0 +1,7 @@
+from .collectives import all_gather_params, psum_bf16, psum_int8_ef, zero1_update
+from .sharding import dp_axes_of, local_mesh, named, shard_tree
+
+__all__ = [
+    "all_gather_params", "psum_bf16", "psum_int8_ef", "zero1_update",
+    "dp_axes_of", "local_mesh", "named", "shard_tree",
+]

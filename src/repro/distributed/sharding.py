@@ -1,0 +1,33 @@
+"""Mesh-axis conventions shared by launchers and tests.
+
+single-pod:  (data=16, model=16)                 256 chips (v5e pod)
+multi-pod:   (pod=2, data=16, model=16)          512 chips
+
+DP = pod x data; TP/EP/state-sharding = model; SP variants shard sequence
+over data for long-context serving.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes_of(mesh: Mesh):
+    names = tuple(mesh.axis_names)
+    return tuple(n for n in names if n != "model") or (names[0],)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shard_tree(mesh: Mesh, tree, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, spec_tree
+    )
+
+
+def local_mesh(n: int = 1, names=("data", "model")) -> Mesh:
+    devs = np.array(jax.devices()[:n]).reshape((n,) + (1,) * (len(names) - 1))
+    return Mesh(devs, names)

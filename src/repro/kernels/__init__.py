@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for QbS hot spots, validated in interpret mode.
+
+* ``minplus``       — tropical matmul for sketching (VPU; min-plus is not an
+                      MXU semiring, see minplus.py docstring)
+* ``bitmap_expand`` — OR-AND BFS frontier expansion on dense blocks (MXU)
+"""
+from .ops import bitmap_expand, minplus, sketch_d_top
+
+__all__ = ["bitmap_expand", "minplus", "sketch_d_top"]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: dense-block BFS frontier expansion on the MXU.
+
+The labelling phase is |R| simultaneous BFSs (Algorithm 2).  On hub-dense
+graph blocks the level-synchronous expansion
+
+    next[r, w] = OR_{v} frontier[r, v] AND adjacency[v, w]
+
+is an OR-AND semiring matmul.  Unlike min-plus, this semiring *does* map
+onto the MXU: cast to f32, matmul, threshold (>0).  The kernel is a blocked
+matmul with a K-grid accumulator; the final grid step applies the
+threshold so the boolean never round-trips through HBM as f32.
+
+This is the TPU-native replacement for the paper's per-thread adjacency
+walks: a (R, V) x (V, V) block product with 128-aligned VMEM tiles keeps
+the MXU busy instead of chasing pointers.  The edge-list ``segment_max``
+path in ``repro.core`` remains the scalable route for sparse graphs; this
+kernel serves the dense blocks (hub-hub subgraphs) where tens of percent
+of all traversal work concentrates (§6.5 of the paper: high-centrality
+regions dominate query work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expand_kernel(f_ref, a_ref, o_ref, acc_ref, *, k_grid: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        f_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_grid - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] > 0.5).astype(jnp.bool_)
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    rem = (-x.shape[axis]) % m
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
+def bitmap_expand(
+    frontier: jax.Array,
+    adjacency: jax.Array,
+    *,
+    tm: int = 8,
+    tn: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """next[r, w] = any_v frontier[r, v] & adjacency[v, w].
+
+    frontier (R, V) bool; adjacency (V, V) bool -> (R, V) bool.
+    """
+    if frontier.ndim != 2 or adjacency.ndim != 2:
+        raise ValueError("rank-2 inputs required")
+    if frontier.shape[1] != adjacency.shape[0]:
+        raise ValueError(f"bad shapes {frontier.shape} x {adjacency.shape}")
+    r, v = frontier.shape
+    f = _pad_to(_pad_to(frontier.astype(jnp.float32), tm, 0), tk, 1)
+    a = _pad_to(_pad_to(adjacency.astype(jnp.float32), tk, 0), tn, 1)
+    k_grid = f.shape[1] // tk
+    grid = (f.shape[0] // tm, a.shape[1] // tn, k_grid)
+
+    out = pl.pallas_call(
+        functools.partial(_expand_kernel, k_grid=k_grid),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((f.shape[0], a.shape[1]), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(f, a)
+    return out[:r, :v]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference semantics the
+kernels must reproduce bit-exactly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Min-plus (tropical) matmul: C[m, n] = min_k (A[m, k] + B[k, n]).
+
+    Used by sketching (Eq. 3): (B_queries, R) x (R, R) distance contraction.
+    int32 inputs with INF sentinels; caller guarantees no overflow
+    (INF = 2**20, so INF + INF << int32 max).
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def bitmap_expand_ref(frontier: jnp.ndarray, adjacency: jnp.ndarray) -> jnp.ndarray:
+    """One level-synchronous BFS expansion over a dense adjacency block.
+
+    frontier:  (R, V) bool — current frontier per BFS root
+    adjacency: (V, V) bool — symmetric adjacency block
+    returns    (R, V) bool — vertices adjacent to the frontier
+
+    The OR-AND semiring product; on the MXU this is an f32 matmul + (>0).
+    """
+    return (frontier.astype(jnp.float32) @ adjacency.astype(jnp.float32)) > 0.5

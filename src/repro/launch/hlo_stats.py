@@ -1,0 +1,92 @@
+"""Extract roofline inputs from a lowered/compiled jit artifact.
+
+``cost_analysis()`` provides HLO FLOPs and bytes accessed; collective bytes
+are NOT in cost_analysis, so we parse the (optimized) HLO text and sum the
+output-shape bytes of every collective op, bucketed by kind.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes of every collective instruction, by kind.
+
+    Matches lines like
+      ``%x = bf16[8,128]{1,0} all-reduce(%y), replica_groups=...``
+      ``%t = (f32[4], f32[4]) all-to-all(...)``
+    Excludes `-start/-done` duplicates (counts the -start only).
+    """
+    out: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            # opcode appears immediately after the result type
+            m = re.match(r"^((?:\([^)]*\))|(?:[\w\[\],{}: ]+?))\s+" + kind + r"(-start)?\(", rhs)
+            if m:
+                if f"{kind}-done" in rhs:
+                    break
+                out[kind] += _shape_bytes(m.group(1))
+                counts[kind] += 1
+                break
+    out_total = dict(out)
+    out_total["_counts"] = dict(counts)  # type: ignore[assignment]
+    return out_total
+
+
+def summarize_compiled(lowered, compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cost = dict(cost or {})
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": repr(e)}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "transcendentals": float(cost.get("transcendentals", -1.0)),
+        "memory": mem_d,
+        "collectives": coll,
+        "n_hlo_lines": text.count("\n"),
+    }

@@ -1,0 +1,26 @@
+"""Architecture zoo: dense/MoE GQA transformers, Mamba2 SSD, RWKV6,
+zamba2-style hybrid, encoder-only audio, VLM — all scan-over-layers."""
+from .config import SHAPES, ModelConfig, ShapeCell, cell_applicable
+from .registry import (
+    Model,
+    batch_pspecs,
+    build_model,
+    cache_pspecs,
+    input_specs,
+    param_pspecs,
+    sanitize_pspecs,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeCell",
+    "cell_applicable",
+    "Model",
+    "batch_pspecs",
+    "build_model",
+    "cache_pspecs",
+    "input_specs",
+    "param_pspecs",
+    "sanitize_pspecs",
+]

@@ -1,0 +1,277 @@
+"""Shared transformer primitives: RMSNorm, RoPE, GQA attention (train /
+prefill / single-step decode with KV cache), SwiGLU MLP, init helpers.
+
+Pure-functional: params are plain dict pytrees; layer stacks are *stacked*
+along a leading axis and consumed with ``lax.scan`` so the HLO is O(1) in
+depth (critical for 62 big-model CPU compiles and for real compile times at
+1000+ nodes).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * gain.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> Params:
+    hd = cfg.hd
+    ks = jax.random.split(key, 5)
+    dt = dtype_of(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    b, s, _ = x.shape
+    hd = cfg.hd
+    return (
+        q.reshape(b, s, cfg.n_heads, hd),
+        k.reshape(b, s, cfg.n_kv_heads, hd),
+        v.reshape(b, s, cfg.n_kv_heads, hd),
+    )
+
+
+def _sdpa(q, k, v, causal: bool, q_offset: jax.Array | int = 0):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd) — GQA via head grouping."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, chunk: int, unroll: bool = False):
+    """Online-softmax attention over KV chunks (flash-style memory profile:
+    logits tiles are (Sq, chunk) instead of (Sq, Sk)).  f32 accumulators."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    chunk = min(chunk, sk)
+    n_chunks = sk // chunk
+    assert n_chunks * chunk == sk, (sk, chunk)
+    qg = q.reshape(b, sq, hkv, group, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    qi = jnp.arange(sq)
+
+    def body(carry, inp):
+        acc, m, l, c_idx = carry
+        k_c, v_c = inp
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c.astype(jnp.float32)) * scale
+        if causal:
+            ki = c_idx * chunk + jnp.arange(chunk)
+            mask = qi[:, None] >= ki[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p_.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_, v_c.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l, c_idx + 1), None
+
+    acc0 = jnp.zeros((b, hkv, group, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    # unroll follows the depth-probe flag so HloCostAnalysis sees every chunk
+    (acc, m, l, _), _ = jax.lax.scan(body, (acc0, m0, l0, jnp.int32(0)), (kc, vc),
+                                     unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)
+    return out.astype(q.dtype)
+
+
+def attention(p: Params, x: jax.Array, cfg, *, causal: bool) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.arange(s)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if getattr(cfg, "attn_impl", "naive") == "chunked" and s > cfg.attn_chunk:
+        out = _sdpa_chunked(q, k, v, causal, cfg.attn_chunk,
+                            unroll=getattr(cfg, "scan_unroll", False))
+    else:
+        out = _sdpa(q, k, v, causal)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_prefill(p: Params, x: jax.Array, cfg):
+    """Returns (out, cache) where cache = (k, v) laid out (B, S, Hkv, hd)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.arange(s)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    out = _sdpa(q, k, v, causal=True)
+    return out.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+def attention_decode(p: Params, x: jax.Array, cache, cache_len: jax.Array, cfg):
+    """One decoded token against a filled KV cache.
+
+    x: (B, 1, D); cache: (k, v) each (B, S_max, Hkv, hd) possibly quantized;
+    cache_len: () int32 — number of valid cache positions.
+    """
+    b, _, _ = x.shape
+    q, k_new, v_new = _qkv(p, x, cfg)
+    q = apply_rope(q, cache_len[None, None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32), cfg.rope_theta)
+    k_new = apply_rope(k_new, cache_len[None, None] * jnp.ones((b, 1), jnp.int32), cfg.rope_theta)
+    k_cache, v_cache = cache
+    k_all, v_all = _cache_append(k_cache, v_cache, k_new, v_new, cache_len)
+
+    kd = _dequant(k_all, k_new.dtype)
+    vd = _dequant(v_all, v_new.dtype)
+    sk = kd.shape[1]
+    # mask out unwritten cache slots
+    valid = jnp.arange(sk)[None, :] <= cache_len
+    big_neg = jnp.float32(-1e30)
+    b_, sq, h, hd = q.shape
+    hkv = kd.shape[2]
+    group = h // hkv
+    qg = q.reshape(b_, sq, hkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) / (hd ** 0.5)
+    logits = jnp.where(valid[:, None, None, None, :], logits, big_neg)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vd.astype(jnp.float32))
+    out = out.reshape(b_, sq, h * hd).astype(x.dtype)
+    return out @ p["wo"], (k_all, v_all)
+
+
+# -- KV cache quantization ---------------------------------------------------
+
+def make_kv_cache(b: int, s_max: int, hkv: int, hd: int, dtype, quantized: bool):
+    if quantized:
+        return (
+            {"q": jnp.zeros((b, s_max, hkv, hd), jnp.int8),
+             "scale": jnp.zeros((b, s_max, hkv, 1), jnp.float32)},
+            {"q": jnp.zeros((b, s_max, hkv, hd), jnp.int8),
+             "scale": jnp.zeros((b, s_max, hkv, 1), jnp.float32)},
+        )
+    return (
+        jnp.zeros((b, s_max, hkv, hd), dtype),
+        jnp.zeros((b, s_max, hkv, hd), dtype),
+    )
+
+
+def _quant(x: jax.Array):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0 + 1e-8
+    return {"q": jnp.round(x / scale).astype(jnp.int8), "scale": scale}
+
+
+def _dequant(c, dtype):
+    if isinstance(c, dict):
+        return (c["q"].astype(jnp.float32) * c["scale"]).astype(dtype)
+    return c
+
+
+def _cache_append(k_cache, v_cache, k_new, v_new, cache_len):
+    if isinstance(k_cache, dict):
+        kq = _quant(k_new)
+        vq = _quant(v_new)
+        k_cache = {
+            "q": jax.lax.dynamic_update_slice_in_dim(k_cache["q"], kq["q"], cache_len, 1),
+            "scale": jax.lax.dynamic_update_slice_in_dim(k_cache["scale"], kq["scale"], cache_len, 1),
+        }
+        v_cache = {
+            "q": jax.lax.dynamic_update_slice_in_dim(v_cache["q"], vq["q"], cache_len, 1),
+            "scale": jax.lax.dynamic_update_slice_in_dim(v_cache["scale"], vq["scale"], cache_len, 1),
+        }
+        return k_cache, v_cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, 1)
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg.dtype)
+    return {
+        "wg": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wu": dense_init(ks[1], cfg.d_model, d_ff, dt),
+        "wd": dense_init(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]

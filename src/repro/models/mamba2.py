@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) block in the chunked matmul form.
+
+The recurrence  h_t = a_t * h_{t-1} + dt_t * B_t x_t^T,  y_t = C_t h_t + D x_t
+(scalar decay a_t per head, as in Mamba2) is evaluated as:
+
+  * intra-chunk: a masked decay-weighted (C_t . B_s) attention-like matmul
+  * inter-chunk: an O(n_chunks) scan over per-chunk summarized states
+
+which keeps the MXU busy instead of emitting a length-S sequential loop —
+the standard TPU-native SSD decomposition.  The single-step ``decode`` path
+updates the (heads, head_dim, state) recurrent state directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.d_model * cfg.ssm_expand
+    heads = cfg.ssm_heads or max(1, d_inner // 64)
+    hd = d_inner // heads
+    return d_inner, heads, hd
+
+
+def init_mamba2(key, cfg) -> dict:
+    d_inner, heads, hd = ssm_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    return {
+        # projections: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * n * heads + heads, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_inner, heads, hd = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xs, bc, dt_ = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n * heads], axis=-1
+    )
+    b_, s = x.shape[0], x.shape[1]
+    bmat = bc[..., : n * heads].reshape(b_, s, heads, n)
+    cmat = bc[..., n * heads:].reshape(b_, s, heads, n)
+    dt_ = jax.nn.softplus(dt_.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    return z, xs, bmat, cmat, dt_
+
+
+def _conv(p, xs, cfg, conv_state=None):
+    """Short causal depthwise conv; returns (out, new_conv_state)."""
+    k = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], k - 1, xs.shape[-1]), xs.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xs], axis=1)
+    new_state = xp[:, -(k - 1):, :]
+    w = p["conv_w"]
+    out = sum(xp[:, i: xp.shape[1] - (k - 1) + i, :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def mamba2_chunked(p: dict, x: jax.Array, cfg, chunk: int = 256,
+                   state=None, return_state: bool = False):
+    """x: (B, S, D). Optional initial state (B, H, hd, N)."""
+    d_inner, heads, hd = ssm_dims(cfg)
+    n = cfg.ssm_state
+    b_, s, _ = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    z, xs, bmat, cmat, dt_ = _split_proj(p, x, cfg)
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _conv(p, xs, cfg, conv_state)
+    xh = xs.reshape(b_, s, heads, hd).astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"])                       # (H,) negative
+    la = dt_ * a[None, None, :]                    # log decay per step (B,S,H)
+    la = la.reshape(b_, nc, chunk, heads)
+    dt_c = dt_.reshape(b_, nc, chunk, heads)
+    xc = xh.reshape(b_, nc, chunk, heads, hd)
+    bc_ = bmat.reshape(b_, nc, chunk, heads, n).astype(jnp.float32)
+    cc = cmat.reshape(b_, nc, chunk, heads, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                   # (B,nc,L,H) log decay to t
+    # intra-chunk: y[t] += sum_{s<=t} exp(cum[t]-cum[s]) dt[s] (C_t.B_s) x[s]
+    scores = jnp.einsum("bnlhs,bnmhs->bnhlm", cc, bc_)          # (B,nc,H,L,L)
+    decay = cum[..., :, None, :] - cum[..., None, :, :]          # (B,nc,L,L,H)
+    decay = jnp.moveaxis(decay, -1, 2)                           # (B,nc,H,L,L)
+    li = jnp.arange(chunk)
+    mask = li[:, None] >= li[None, :]
+    # mask the *exponent* (not the product): exp of the masked upper triangle
+    # would overflow and poison gradients through 0 * inf
+    decay = jnp.where(mask[None, None, None], decay, -1e9)
+    w = jnp.exp(decay) * scores
+    y = jnp.einsum("bnhlm,bnmh,bnmhd->bnlhd", w, dt_c, xc)
+
+    # chunk summary states and inter-chunk scan
+    tail = cum[..., -1:, :] - cum                                # decay to end
+    gk = jnp.exp(tail)                                           # (B,nc,L,H)
+    chunk_state = jnp.einsum("bnlh,bnlh,bnlhs,bnlhd->bnhds",
+                             gk, dt_c, bc_, xc)                  # (B,nc,H,hd,N)
+    chunk_decay = jnp.exp(cum[..., -1, :])                       # (B,nc,H)
+
+    s0 = jnp.zeros((b_, heads, hd, n), jnp.float32) if state is None \
+        else state["ssm"].astype(jnp.float32)
+
+    def scan_fn(h, inp):
+        cs, cd = inp
+        h_out = h                                   # state entering this chunk
+        h = h * cd[:, :, None, None] + cs
+        return h, h_out
+
+    (h_last, h_in) = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                              # (B,nc,H,hd,N)
+    # inter-chunk contribution: C_t . (decay_to_t * h_in)
+    y = y + jnp.einsum("bnlhs,bnlh,bnhds->bnlhd", cc, jnp.exp(cum), h_in)
+
+    y = y + p["d_skip"][None, None, :, None] * xc.reshape(b_, nc, chunk, heads, hd)
+    y = y.reshape(b_, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # grouped RMS norm
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y * p["norm_g"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"ssm": h_last.astype(jnp.float32), "conv": new_conv}
+    return out
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg, state):
+    """One-step recurrence. x: (B, 1, D); state {ssm (B,H,hd,N), conv}."""
+    d_inner, heads, hd = ssm_dims(cfg)
+    z, xs, bmat, cmat, dt_ = _split_proj(p, x, cfg)
+    xs, new_conv = _conv(p, xs, cfg, state["conv"])
+    xh = xs.reshape(x.shape[0], heads, hd).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_[:, 0, :] * a[None, :])                   # (B,H)
+    bm = bmat[:, 0].astype(jnp.float32)                          # (B,H,N)
+    cm = cmat[:, 0].astype(jnp.float32)
+    h = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhd->bhdn", dt_[:, 0], bm, xh
+    )
+    y = jnp.einsum("bhn,bhdn->bhd", cm, h)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y * p["norm_g"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"], {"ssm": h, "conv": new_conv}

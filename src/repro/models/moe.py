@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer: top-k router with GShard-style capacity
+dispatch (one-hot dispatch/combine einsums — the TPU-native formulation:
+dense matmuls instead of data-dependent gathers, EP-shardable on the
+``model`` axis).
+
+FLOPs scale with tokens * top_k (not tokens * n_experts): each token is
+copied into at most ``top_k`` expert capacity slots; overflow tokens are
+dropped from the expert path (standard capacity-factor routing), which at
+capacity_factor 1.25 affects a negligible tail and keeps every shape
+static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of
+
+
+def init_moe(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg.dtype)
+    e = cfg.moe_experts
+    d, f = cfg.d_model, cfg.d_ff
+    scale = d ** -0.5
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "wg": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dt),
+        "wu": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dt),
+        "wd": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * (f ** -0.5)).astype(dt),
+    }
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    cap = int(n_tokens * cfg.moe_top_k * cfg.moe_capacity_factor / cfg.moe_experts)
+    return max(8, (cap + 7) // 8 * 8)  # 8-aligned for TPU lanes
+
+
+def moe(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    if getattr(cfg, "moe_dispatch", "onehot") == "sort":
+        return moe_sort(p, x, cfg)
+    return moe_onehot(p, x, cfg)
+
+
+def moe_onehot(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). Dispatch via one-hot einsums.
+
+    ``moe_group_size=0`` is the naive single-group GShard baseline: capacity
+    scales with N, so the dispatch einsum is O(N^2 k d / G) — it dominates
+    compute at train shapes (EXPERIMENTS.md §Perf).  ``moe_group_size=m``
+    routes within groups of m tokens (GShard's G dimension): dispatch cost
+    drops by N/m with identical semantics up to per-group capacity dropping.
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    m = cfg.moe_group_size or n
+    m = min(m, n)
+    g = n // m
+    if g * m != n:
+        g, m = 1, n
+    cap = moe_capacity(cfg, m)
+    xt = x.reshape(g, m, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # (G, m, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G, m, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style, global)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,)).at[gate_idx.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, choice) inside its expert's per-group buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G, m, k, E)
+    flat = onehot.reshape(g, m * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) * flat - 1      # (G, m*k, E)
+    pos = pos_in_expert.max(axis=-1).reshape(g, m, k)        # (G, m, k)
+    keep = (pos < cap) & (pos >= 0)
+    gate_vals = gate_vals * keep
+
+    # dispatch tensor (G, m, k) -> (G, E, cap) one-hot combine
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    disp = (
+        jax.nn.one_hot(gate_idx, e, dtype=xt.dtype)[..., None]
+        * jax.nn.one_hot(pos_c, cap, dtype=xt.dtype)[:, :, :, None, :]
+        * keep[..., None, None].astype(xt.dtype)
+    )                                                        # (G, m, k, E, cap)
+    disp_tok = disp.sum(axis=2)                              # (G, m, E, cap)
+    xe = jnp.einsum("gmd,gmec->gecd", xt, disp_tok)          # (G, E, cap, D)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])            # (G, E, cap, D)
+
+    combine = jnp.einsum("gmkec,gmk->gmec", disp, gate_vals.astype(xt.dtype))
+    out = jnp.einsum("gmec,gecd->gmd", combine, ye)
+    return out.reshape(b, s, d), aux
+
+
+def moe_sort(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Sort/scatter-based dispatch: O(N*k*d) data movement, no N^2 one-hot
+    matmuls.  Identical routing semantics to ``moe_onehot`` (stable argsort
+    preserves the per-expert token order, so the same overflow tokens drop).
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cap = moe_capacity(cfg, n)
+    xt = x.reshape(n, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (N, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,)).at[gate_idx.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    e_flat = gate_idx.reshape(-1)                            # (N*k,)
+    g_flat = gate_vals.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    tok_of = order // k
+    start = jnp.searchsorted(sorted_e, jnp.arange(e))        # (E,)
+    pos = jnp.arange(n * k) - start[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)    # overflow slot
+
+    def anchor(t, spec):
+        if not getattr(cfg, "moe_ep_anchor", False):
+            return t
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    xe = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].set(xt[tok_of])
+    xe = anchor(xe[:-1].reshape(e, cap, d), ("model", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])
+    ye = anchor(ye, ("model", None, None)).reshape(e * cap, d)
+
+    contrib = ye[jnp.clip(dest, 0, e * cap - 1)] * (
+        g_flat[order] * keep).astype(ye.dtype)[:, None]
+    out = jnp.zeros((n, d), ye.dtype).at[tok_of].add(contrib)
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,192 @@
+"""Model facade + sharding rules + ShapeDtypeStruct input specs.
+
+``build_model(cfg)`` returns pure functions; ``param_pspecs`` /
+``batch_pspecs`` / ``cache_pspecs`` give the PartitionSpec trees used by the
+launcher (Megatron-style TP on ``model``, DP over the remaining axes, EP for
+MoE experts, recurrent-state sharding for SSM families).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer as T
+from .config import ModelConfig, ShapeCell
+from .layers import dtype_of
+
+N_VLM_PATCHES = 256  # static patch-prefix length for the [vlm] stub frontend
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Any
+    loss: Any
+    forward: Any
+    prefill: Any
+    decode: Any
+    init_decode_cache: Any
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=partial(T.init_params, cfg=cfg),
+        loss=partial(T.loss_fn, cfg=cfg),
+        forward=partial(T.forward, cfg=cfg),
+        prefill=partial(T.prefill, cfg=cfg),
+        decode=partial(T.decode_step, cfg=cfg),
+        init_decode_cache=partial(T.init_decode_cache, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wg", "wu", "ck", "cr", "in_proj", "head",
+        "frontend", "conv_w", "wr"}
+_ROW = {"wo", "wd", "cv", "out_proj"}
+_BIAS_TP = {"bq", "bk", "bv"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def param_pspecs(cfg: ModelConfig, params) -> Any:
+    """PartitionSpec tree for params (TP on 'model'; leading stack dims
+    replicated). MoE expert tensors are expert-sharded (EP == TP axis)."""
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        keys = [str(e.key) for e in path if hasattr(e, "key")]
+        nd = leaf.ndim
+        if name == "embed":
+            return P("model", None)
+        if "moe" in keys and name in {"wg", "wu", "wd"}:
+            return P(*([None] * (nd - 3) + ["model", None, None]))
+        if name in _COL:
+            return P(*([None] * (nd - 2) + [None, "model"]))
+        if name in _ROW:
+            return P(*([None] * (nd - 2) + ["model", None]))
+        if name in _BIAS_TP:
+            return P(*([None] * (nd - 1) + ["model"]))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_pspecs(cfg: ModelConfig, batch, dp_axes) -> Any:
+    def rule(path, leaf):
+        return P(*([dp_axes] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(cfg: ModelConfig, cache, dp_axes) -> Any:
+    """KV caches: batch on DP, head_dim on 'model' (always divisible, unlike
+    kv-head counts e.g. qwen32b kv=40 on TP16); SSM/RWKV states: heads on
+    'model'."""
+
+    def full_rule(path, leaf):
+        # Caches are stacked along leading lax.scan layer dims; classify by
+        # the trailing 3/4 dims and replicate the stack dims.
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in {"shift", "cm", "conv"}:              # (..., B, k, D) states
+            return P(*([None] * (nd - 3) + [dp_axes, None, "model"]))
+        if nd >= 4 and name in {"wkv", "ssm"}:          # (B, H, hd, {hd|N})
+            return P(*([None] * (nd - 4) + [dp_axes, "model", None, None]))
+        if nd >= 4 and name == "scale":                  # int8 KV scales (B,S,Hkv,1)
+            return P(*([None] * (nd - 4) + [dp_axes, None, None, None]))
+        if nd >= 4:                                      # KV (B, S, Hkv, hd) / int8 q
+            return P(*([None] * (nd - 4) + [dp_axes, None, None, "model"]))
+        if nd >= 3:                                      # conv/shift states (B, k, D)
+            return P(*([None] * (nd - 3) + [dp_axes, None, "model"]))
+        return P(*([dp_axes] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(full_rule, cache)
+
+
+def sanitize_pspecs(spec_tree, shape_tree, axis_sizes: dict[str, int]):
+    """Drop mesh axes from any dimension they don't divide (e.g. hubert's
+    vocab=504 on a 16-way model axis) — the leaf stays sharded on the other
+    dims instead of failing at lowering."""
+
+    def fix(spec, leaf):
+        dims = list(spec)
+        out = []
+        for i, d in enumerate(dims):
+            if d is None:
+                out.append(None)
+                continue
+            axes = (d,) if isinstance(d, str) else tuple(d)
+            prod = 1
+            for a in axes:
+                prod *= axis_sizes.get(a, 1)
+            out.append(d if leaf.shape[i] % prod == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, *, kv_quant: bool = False) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        if cfg.frontend == "audio_frames":
+            return {"batch": {
+                "features": sds((b, s, cfg.frontend_dim), f32),
+                "targets": sds((b, s), i32),
+                "loss_mask": sds((b, s), jnp.bool_),
+            }}
+        if cfg.frontend == "vision_patches":
+            return {"batch": {
+                "patches": sds((b, N_VLM_PATCHES, cfg.frontend_dim), f32),
+                "tokens": sds((b, s - N_VLM_PATCHES), i32),
+            }}
+        return {"batch": {"tokens": sds((b, s), i32)}}
+
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio_frames":  # encoder forward pass
+            return {"batch": {
+                "features": sds((b, s, cfg.frontend_dim), f32),
+                "targets": sds((b, s), i32),
+                "loss_mask": sds((b, s), jnp.bool_),
+            }}
+        if cfg.frontend == "vision_patches":
+            return {"batch": {
+                "patches": sds((b, N_VLM_PATCHES, cfg.frontend_dim), f32),
+                "tokens": sds((b, s - N_VLM_PATCHES), i32),
+            }}
+        return {"batch": {"tokens": sds((b, s), i32)}}
+
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_decode_cache(b, s, kv_quant=kv_quant)
+    )
+    return {
+        "cache": cache_shapes,
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+    }

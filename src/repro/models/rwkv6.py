@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent per-channel decay and
+channel-mix, in chunked matmul form.
+
+Recurrence (per head, d_k x d_v state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Chunked evaluation: within a chunk of length L the contribution of step s to
+step t (s < t) carries the decay  prod_{s<r<t} w_r  (note: *exclusive* of t
+— y_t reads S_{t-1}), which factorizes as  cumw_{t-1} / cumw_s  so
+
+    y_t = (r_t . cw_t) @ sum_s ((k_s / cw'_s) v_s^T)   (masked, per chunk)
+        + bonus diag(u) current-token term
+        + (r_t . cw_t) @ S_chunk_in
+
+with f32 internals and L = 64 to bound the dynamic range of the cumulative
+decays (the flash-linear-attention recipe).  Decode is the plain one-step
+recurrence.  Data-dependent decay w_t = exp(-exp(w0 + lora(x_t))) and the
+token-shift mixers follow the RWKV-6 formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of
+
+
+def rwkv_dims(cfg):
+    heads = cfg.d_model // cfg.rwkv_head_dim
+    return heads, cfg.rwkv_head_dim
+
+
+def init_rwkv6(key, cfg) -> dict:
+    d = cfg.d_model
+    heads, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    dt = dtype_of(cfg.dtype)
+    lora = 64
+    return {
+        # token-shift interpolation weights (5 mixers: r,k,v,w,g)
+        "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(jnp.float32),
+        "wr": dense_init(ks[1], d, d, dt),
+        "wk": dense_init(ks[2], d, d, dt),
+        "wv": dense_init(ks[3], d, d, dt),
+        "wg": dense_init(ks[4], d, d, dt),
+        "wo": dense_init(ks[5], d, d, dt),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.6,
+        "w_lora_a": dense_init(ks[6], d, lora, jnp.float32, scale=0.01),
+        "w_lora_b": dense_init(ks[7], lora, d, jnp.float32, scale=0.01),
+        "u": (jax.random.normal(ks[8], (heads, hd), jnp.float32) * 0.1),
+        "ln_g": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "ck": dense_init(ks[9], d, cfg.d_ff, dt),
+        "cv": dense_init(ks[10], cfg.d_ff, d, dt),
+        "cr": dense_init(ks[11], d, d, dt),
+        "cmix": jnp.full((2, d), 0.5, jnp.float32),
+    }
+
+
+def _token_shift(x, last):
+    """shift right by one; ``last`` (B, 1, D) is the previous block state."""
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(p, x, last):
+    xs = _token_shift(x, last)
+    mix = p["mix"][:, None, None, :]
+    feats = x[None] * mix + xs[None] * (1.0 - mix)   # (5, B, S, D)
+    r = feats[0] @ p["wr"]
+    k = feats[1] @ p["wk"]
+    v = feats[2] @ p["wv"]
+    g = feats[4] @ p["wg"]
+    wln = jnp.tanh(feats[3].astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    # log decay in [-e, -3e-4]: bounded so a 64-step chunk's cumulative decay
+    # range (<= 64 * e ~ 174) stays factorizable in f32 after centering.
+    logw = -jnp.exp(jnp.clip(p["w0"] + wln, -8.0, 1.0))
+    return r, k, v, g, logw
+
+
+def rwkv6_time_mix(p: dict, x: jax.Array, cfg, chunk: int = 64,
+                   state=None, return_state: bool = False):
+    b_, s, d = x.shape
+    heads, hd = rwkv_dims(cfg)
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    last = jnp.zeros((b_, 1, d), x.dtype) if state is None else state["shift"]
+    r, k, v, g, logw = _time_mix_inputs(p, x, last)
+
+    rh = r.reshape(b_, nc, chunk, heads, hd).astype(jnp.float32)
+    kh = k.reshape(b_, nc, chunk, heads, hd).astype(jnp.float32)
+    vh = v.reshape(b_, nc, chunk, heads, hd).astype(jnp.float32)
+    lw = logw.reshape(b_, nc, chunk, heads, hd)
+
+    cum = jnp.cumsum(lw, axis=2)          # inclusive log cumdecay within chunk
+    cum_ex = cum - lw                     # exclusive (decay applied before t)
+    # intra-chunk pair decay: exp(cum_ex[t] - cum[s])  (<= 1, but the naive
+    # exp(cum_ex) * exp(-cum) factors overflow f32 for strong decays).
+    # Center both exponents by half the chunk's total log decay so each
+    # factor is bounded by exp(range/2) <= exp(87); clip for safety margin —
+    # clipped terms correspond to pair decays < e^-160 ~ 0.
+    shift = 0.5 * cum[..., -1:, :, :]                          # (B,nc,1,H,hd)
+    q_dec = rh * jnp.exp(jnp.clip(cum_ex - shift, -80.0, 80.0))
+    k_dec = kh * jnp.exp(jnp.clip(shift - cum, -80.0, 80.0))
+    scores = jnp.einsum("bnlhd,bnmhd->bnhlm", q_dec, k_dec)
+    li = jnp.arange(chunk)
+    mask = li[:, None] > li[None, :]                           # strict s < t
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y = jnp.einsum("bnhlm,bnmhd->bnlhd", scores, vh)
+    # bonus current-token term: r_t . diag(u) k_t v_t
+    bonus = jnp.einsum("bnlhd,hd,bnlhd->bnlh", rh, p["u"], kh)
+    y = y + bonus[..., None] * vh
+
+    # inter-chunk state scan: S_chunk_end = diag(prod w) S_in + sum_s decay k_s v_s
+    tail = cum[..., -1:, :, :] - cum                            # decay s -> end
+    kv = jnp.einsum("bnlhd,bnlhe->bnhde", kh * jnp.exp(tail), vh)  # (B,nc,H,hd,hd)
+    cdecay = jnp.exp(cum[..., -1, :, :])                        # (B,nc,H,hd)
+
+    s0 = jnp.zeros((b_, heads, hd, hd), jnp.float32) if state is None \
+        else state["wkv"].astype(jnp.float32)
+
+    def scan_fn(h, inp):
+        kv_c, dec_c = inp
+        h_in = h
+        h = h * dec_c[:, :, :, None] + kv_c
+        return h, h_in
+
+    h_last, h_in = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(kv, 1, 0), jnp.moveaxis(cdecay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                             # (B,nc,H,hd,hd)
+    # inter-chunk readout uses the *uncentered* decay (<= 1, overflow-free)
+    q_inter = rh * jnp.exp(cum_ex)
+    y = y + jnp.einsum("bnlhd,bnhde->bnlhe", q_inter, h_in)
+
+    y = y.reshape(b_, s, d)
+    # group norm per head then gate
+    yh = y.reshape(b_, s, heads, hd)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (yh.reshape(b_, s, d) * p["ln_g"]) * jax.nn.silu(g.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["wo"]
+    if return_state:
+        return out, {"wkv": h_last, "shift": x[:, -1:, :]}
+    return out
+
+
+def rwkv6_time_mix_decode(p: dict, x: jax.Array, cfg, state):
+    """x: (B, 1, D); state {wkv (B,H,hd,hd), shift (B,1,D)}."""
+    b_, _, d = x.shape
+    heads, hd = rwkv_dims(cfg)
+    r, k, v, g, logw = _time_mix_inputs(p, x, state["shift"])
+    rh = r.reshape(b_, heads, hd).astype(jnp.float32)
+    kh = k.reshape(b_, heads, hd).astype(jnp.float32)
+    vh = v.reshape(b_, heads, hd).astype(jnp.float32)
+    w = jnp.exp(logw[:, 0].reshape(b_, heads, hd))
+    s_prev = state["wkv"]
+    y = jnp.einsum("bhd,bhde->bhe", rh, s_prev) + \
+        jnp.einsum("bhd,hd,bhd,bhe->bhe", rh, p["u"], kh, vh)
+    s_new = s_prev * w[..., None] + jnp.einsum("bhd,bhe->bhde", kh, vh)
+    yh = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    yv = (yh.reshape(b_, 1, d) * p["ln_g"]) * jax.nn.silu(g.astype(jnp.float32))
+    out = yv.astype(x.dtype) @ p["wo"]
+    return out, {"wkv": s_new, "shift": x}
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, state=None, return_state: bool = False):
+    b_, s, d = x.shape
+    last = jnp.zeros((b_, 1, d), x.dtype) if state is None else state
+    xs = _token_shift(x, last)
+    mix = p["cmix"][:, None, None, :]
+    fk = x * mix[0].astype(x.dtype) + xs * (1 - mix[0]).astype(x.dtype)
+    fr = x * mix[1].astype(x.dtype) + xs * (1 - mix[1]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(fk @ p["ck"]))
+    out = jax.nn.sigmoid((fr @ p["cr"]).astype(jnp.float32)).astype(x.dtype) * (kk @ p["cv"])
+    if return_state:
+        return out, x[:, -1:, :]
+    return out

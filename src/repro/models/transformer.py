@@ -1,0 +1,401 @@
+"""Model assembly for the architecture pool.
+
+One functional LM with per-family block types, always consumed via
+``lax.scan`` over *stacked* layer params (HLO depth-independent):
+
+  dense / moe       pre-norm GQA attention + SwiGLU MLP (or MoE)
+  ssm (rwkv6)       time-mix + channel-mix
+  hybrid (zamba2)   groups of Mamba2 layers + one *shared* attention block
+                    applied after every group (weights reused, zamba2-style
+                    concat(h, first-layer input) conditioning)
+  audio / vlm       stub modality frontends (precomputed frame/patch
+                    embeddings per the brief) feeding the dense stack;
+                    audio is encoder-only (bidirectional, no decode path)
+
+Three entry points per model: ``loss`` (training), ``prefill`` (build KV /
+recurrent caches), ``decode`` (one token against filled caches).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M2
+from . import moe as MOE
+from . import rwkv6 as R6
+from .config import ModelConfig
+
+Params = Any
+
+
+def _anchor(h, cfg):
+    """Optional per-block activation sharding anchor (cfg.act_spec)."""
+    if cfg.act_spec is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(*(tuple(a) if isinstance(a, (list, tuple)) else a
+               for a in cfg.act_spec))
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def _maybe_remat(body, cfg):
+    """Per-layer activation checkpointing: the scan body saves only its
+    inputs; intra-layer activations are recomputed during backward."""
+    if getattr(cfg, "remat_policy", "none") == "layer":
+        return jax.checkpoint(body)
+    return body
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (dense & moe)
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe_experts:
+        p["moe"] = MOE.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _dense_block(p, x, cfg, *, causal: bool):
+    h = x + L.attention(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, causal=causal)
+    if cfg.moe_experts:
+        out, aux = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        return h + out, aux
+    return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), jnp.float32(0)
+
+
+def _dense_block_prefill(p, x, cfg):
+    hn = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, cache = L.attention_prefill(p["attn"], hn, cfg)
+    h = x + a
+    if cfg.moe_experts:
+        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        return h + out, cache
+    return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), cache
+
+
+def _dense_block_decode(p, x, cache, cache_len, cfg):
+    hn = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, cache = L.attention_decode(p["attn"], hn, cache, cache_len, cfg)
+    h = x + a
+    if cfg.moe_experts:
+        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        return h + out, cache
+    return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 block
+# ---------------------------------------------------------------------------
+
+def _init_rwkv_block(key, cfg):
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "tm": R6.init_rwkv6(key, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _rwkv_block(p, x, cfg):
+    h = x + R6.rwkv6_time_mix(p["tm"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+    h = h + R6.rwkv6_channel_mix(p["tm"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return h
+
+
+def _rwkv_block_prefill(p, x, cfg):
+    tm_out, tm_state = R6.rwkv6_time_mix(
+        p["tm"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, return_state=True)
+    h = x + tm_out
+    cm_out, cm_state = R6.rwkv6_channel_mix(
+        p["tm"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), return_state=True)
+    return h + cm_out, {"tm": tm_state, "cm": cm_state}
+
+
+def _rwkv_block_decode(p, x, cache, cfg):
+    tm_out, tm_state = R6.rwkv6_time_mix_decode(
+        p["tm"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, cache["tm"])
+    h = x + tm_out
+    cm_out, cm_state = R6.rwkv6_channel_mix(
+        p["tm"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cache["cm"], return_state=True)
+    return h + cm_out, {"tm": tm_state, "cm": cm_state}
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = L.dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: dict = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.frontend != "none":
+        p["frontend"] = L.dense_init(keys[2], cfg.frontend_dim, cfg.d_model, dt)
+
+    if cfg.family == "ssm":
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        p["blocks"] = jax.vmap(lambda k: _init_rwkv_block(k, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        gkeys = jax.random.split(keys[3], n_groups * period).reshape(n_groups, period, 2)
+        p["blocks"] = jax.vmap(jax.vmap(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "mamba": M2.init_mamba2(k, cfg),
+        }))(gkeys)
+        # one shared attention block conditioned on concat(h, x_emb)
+        sk = jax.random.split(keys[4], 3)
+        p["shared"] = {
+            "in_proj": L.dense_init(sk[0], 2 * cfg.d_model, cfg.d_model, dt),
+            "block": _init_dense_block(sk[1], cfg),
+            "out_proj": L.dense_init(sk[2], cfg.d_model, cfg.d_model, dt),
+        }
+    else:  # dense / moe / audio / vlm
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        p["blocks"] = jax.vmap(lambda k: _init_dense_block(k, cfg))(lkeys)
+    return p
+
+
+def _unembed(p, cfg, h):
+    h = L.rmsnorm(h, p["ln_f"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return (h @ w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# forward (train) per family
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V) f32, aux_loss)."""
+    causal = not cfg.encoder_only
+    if cfg.frontend == "audio_frames":
+        x = batch["features"].astype(L.dtype_of(cfg.dtype)) @ params["frontend"]
+    elif cfg.frontend == "vision_patches":
+        pe = batch["patches"].astype(L.dtype_of(cfg.dtype)) @ params["frontend"]
+        te = params["embed"][batch["tokens"]]
+        x = jnp.concatenate([pe, te], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]]
+
+    if cfg.family == "ssm":
+        def body(h, blk):
+            return _rwkv_block(blk, h, cfg), None
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["blocks"],
+                            unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, h), jnp.float32(0)
+
+    if cfg.family == "hybrid":
+        x0 = x
+
+        def group(h, grp):
+            def inner(h, blk):
+                return h + M2.mamba2_chunked(
+                    blk["mamba"], L.rmsnorm(h, blk["ln"], cfg.norm_eps), cfg), None
+            h, _ = jax.lax.scan(_maybe_remat(inner, cfg), h, grp,
+                                unroll=cfg.scan_unroll)
+            h = _shared_apply(params["shared"], h, x0, cfg)
+            return h, None
+
+        h, _ = jax.lax.scan(group, x, params["blocks"], unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, h), jnp.float32(0)
+
+    def body(carry, blk):
+        h, aux = carry
+        h, a = _dense_block(blk, h, cfg, causal=causal)
+        return (_anchor(h, cfg), aux + a), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, jnp.float32(0)),
+                               params["blocks"], unroll=cfg.scan_unroll)
+    return _unembed(params, cfg, h), aux / cfg.n_layers
+
+
+def _shared_apply(sp, h, x0, cfg):
+    z = jnp.concatenate([h, x0], axis=-1) @ sp["in_proj"]
+    z, _ = _dense_block(sp["block"], z, cfg, causal=not cfg.encoder_only)
+    return h + z @ sp["out_proj"]
+
+
+def _shared_prefill(sp, h, x0, cfg):
+    z = jnp.concatenate([h, x0], axis=-1) @ sp["in_proj"]
+    z, cache = _dense_block_prefill(sp["block"], z, cfg)
+    return h + z @ sp["out_proj"], cache
+
+
+def _shared_decode(sp, h, x0, cache, cache_len, cfg):
+    z = jnp.concatenate([h, x0], axis=-1) @ sp["in_proj"]
+    z, cache = _dense_block_decode(sp["block"], z, cache, cache_len, cfg)
+    return h + z @ sp["out_proj"], cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch)
+    if cfg.encoder_only:
+        targets = batch["targets"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision_patches":
+            n_patch = batch["patches"].shape[1]
+            logits = logits[:, n_patch:, :]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"nll": loss, "aux": aux}
+    return loss + 0.01 * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ModelConfig, batch: dict):
+    """Run the full prompt; returns (last-position logits, cache pytree)."""
+    if cfg.encoder_only:
+        raise ValueError("encoder-only model has no autoregressive serving path")
+    if cfg.frontend == "vision_patches":
+        pe = batch["patches"].astype(L.dtype_of(cfg.dtype)) @ params["frontend"]
+        te = params["embed"][batch["tokens"]]
+        x = jnp.concatenate([pe, te], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]]
+
+    if cfg.family == "ssm":
+        def body(h, blk):
+            h, st = _rwkv_block_prefill(blk, h, cfg)
+            return h, st
+        h, caches = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+        cache = {"layers": caches, "x0_last": None}
+    elif cfg.family == "hybrid":
+        x0 = x
+        shared_caches = []
+
+        def group(h, grp):
+            def inner(h, blk):
+                out, st = M2.mamba2_chunked(
+                    blk["mamba"], L.rmsnorm(h, blk["ln"], cfg.norm_eps), cfg,
+                    return_state=True)
+                return h + out, st
+            h, sts = jax.lax.scan(inner, h, grp, unroll=cfg.scan_unroll)
+            h, att_cache = _shared_prefill(params["shared"], h, x0, cfg)
+            return h, (sts, att_cache)
+
+        h, (mamba_states, attn_caches) = jax.lax.scan(group, x, params["blocks"], unroll=cfg.scan_unroll)
+        cache = {"mamba": mamba_states, "attn": attn_caches}
+    else:
+        def body(h, blk):
+            h, c = _dense_block_prefill(blk, h, cfg)
+            return h, c
+        h, caches = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+        cache = {"layers": caches}
+
+    logits = _unembed(params, cfg, h[:, -1:, :])
+    return logits, cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+                      *, kv_quant: bool = False):
+    """Fresh caches sized for ``max_seq`` (decode dry-run entry point)."""
+    dt = L.dtype_of(cfg.dtype)
+    hd = cfg.hd
+    if cfg.family == "ssm":
+        heads, rhd = R6.rwkv_dims(cfg)
+
+        def one(_):
+            return {
+                "tm": {"wkv": jnp.zeros((batch_size, heads, rhd, rhd), jnp.float32),
+                       "shift": jnp.zeros((batch_size, 1, cfg.d_model), dt)},
+                "cm": jnp.zeros((batch_size, 1, cfg.d_model), dt),
+            }
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+    if cfg.family == "hybrid":
+        d_inner, heads, mhd = M2.ssm_dims(cfg)
+        n_groups = cfg.n_layers // cfg.hybrid_period
+
+        def one_m(_):
+            return {
+                "ssm": jnp.zeros((batch_size, heads, mhd, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1, d_inner), dt),
+            }
+        mamba = jax.vmap(jax.vmap(one_m))(
+            jnp.zeros((n_groups, cfg.hybrid_period)))
+
+        def one_a(_):
+            return L.make_kv_cache(batch_size, max_seq, cfg.n_kv_heads, hd, dt, kv_quant)
+        attn = jax.vmap(one_a)(jnp.arange(n_groups))
+        return {"mamba": mamba, "attn": attn,
+                "x0_last": jnp.zeros((batch_size, 1, cfg.d_model), dt)}
+
+    def one(_):
+        return L.make_kv_cache(batch_size, max_seq, cfg.n_kv_heads, hd, dt, kv_quant)
+    return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, cache_len, tokens):
+    """One token: tokens (B, 1) int32 -> (logits (B,1,V), new cache)."""
+    if cfg.encoder_only:
+        raise ValueError("encoder-only model has no decode step")
+    x = params["embed"][tokens]
+
+    if cfg.family == "ssm":
+        def body(h, blk_cache):
+            blk, c = blk_cache
+            h, c2 = _rwkv_block_decode(blk, h, c, cfg)
+            return h, c2
+        h, new_caches = jax.lax.scan(body, x, (params["blocks"], cache["layers"]), unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, h), {"layers": new_caches}
+
+    if cfg.family == "hybrid":
+        x0 = x
+
+        def group(h, grp_cache):
+            grp, mstates, acache = grp_cache
+
+            def inner(h, blk_state):
+                blk, st = blk_state
+                out, st2 = M2.mamba2_decode(
+                    blk["mamba"], L.rmsnorm(h, blk["ln"], cfg.norm_eps), cfg, st)
+                return h + out, st2
+            h, msts = jax.lax.scan(inner, h, (grp, mstates), unroll=cfg.scan_unroll)
+            h, ac2 = _shared_decode(params["shared"], h, x0, acache, cache_len, cfg)
+            return h, (msts, ac2)
+
+        h, (msts, acs) = jax.lax.scan(
+            group, x, (params["blocks"], cache["mamba"], cache["attn"]),
+            unroll=cfg.scan_unroll)
+        return _unembed(params, cfg, h), {
+            "mamba": msts, "attn": acs, "x0_last": cache["x0_last"]}
+
+    def body(h, blk_cache):
+        blk, c = blk_cache
+        h, c2 = _dense_block_decode(blk, h, c, cache_len, cfg)
+        return h, c2
+    h, new_caches = jax.lax.scan(body, x, (params["blocks"], cache["layers"]), unroll=cfg.scan_unroll)
+    return _unembed(params, cfg, h), {"layers": new_caches}

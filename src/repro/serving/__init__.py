@@ -1,0 +1,3 @@
+from .serve_step import greedy_generate, make_decode_step, make_prefill_step
+
+__all__ = ["greedy_generate", "make_decode_step", "make_prefill_step"]

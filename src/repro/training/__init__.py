@@ -1,0 +1,7 @@
+from .optimizer import Optimizer, adamw, clip_by_global_norm, global_norm, warmup_cosine
+from .train_step import compress_bf16, make_train_step
+
+__all__ = [
+    "Optimizer", "adamw", "clip_by_global_norm", "global_norm",
+    "warmup_cosine", "compress_bf16", "make_train_step",
+]

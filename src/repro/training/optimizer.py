@@ -1,0 +1,81 @@
+"""Self-contained optimizer stack (no optax dependency): AdamW with
+decoupled weight decay, global-norm clipping, warmup+cosine schedule.
+Optimizer state dtype is f32 regardless of param dtype (mixed precision:
+bf16 params, f32 master moments)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any, dict]]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return {"mu": zeros, "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state["mu"], grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state["nu"], grads)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, {
+            "grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,83 @@
+"""Training step factory: grad accumulation, mixed precision, activation
+remat, optional gradient compression hook.
+
+Distribution model: params carry TP PartitionSpecs, the batch is DP-sharded;
+under ``jit`` GSPMD inserts the DP gradient all-reduce.  Microbatched
+accumulation runs as a ``lax.scan`` whose per-microbatch backward overlaps
+with the deferred reduction (the reduce happens once on the accumulated
+grads — 1/k the collective bytes of naive per-microbatch reduction).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import Model
+from .optimizer import Optimizer
+
+
+def _split_microbatches(batch: dict, k: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def compress_bf16(grads):
+    """Gradient compression: bf16 round-trip (2x collective bytes saving
+    when the DP reduce is done in the compressed domain)."""
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    remat: bool = False,
+    compress: Callable | None = None,
+) -> Callable:
+    loss_fn = model.loss
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn, static_argnums=())
+
+    def train_step(params, opt_state, batch):
+        def grad_of(p, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: loss_fn(q, batch=mb), has_aux=True)(p)
+            return loss, metrics, grads
+
+        if microbatches == 1:
+            loss, metrics, grads = grad_of(params, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def body(acc, mb):
+                loss_a, grads_a, n = acc
+                loss, metrics, grads = grad_of(params, mb)
+                grads_a = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+                return (loss_a + loss, grads_a, n + 1), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads, _), metrics = jax.lax.scan(
+                body, (jnp.float32(0), zeros, jnp.int32(0)), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics) if isinstance(metrics, dict) else {"nll": loss}
+        metrics["loss"] = loss
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,41 @@
+"""Subprocess helper: exactness of distributed labelling/serving on 8 host
+devices (spawned by tests/test_distributed.py with XLA_FLAGS set)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import QbSIndex, build_labelling, gnp_random_graph, select_landmarks
+from repro.core.baselines import bfs_spg
+from repro.core.distributed import distributed_build_labelling, make_serve_step
+
+assert len(jax.devices()) == 8, jax.devices()
+g = gnp_random_graph(60, 3.5, seed=42)
+landmarks = select_landmarks(g, 5)
+ref = build_labelling(g, landmarks)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+for mode in ("bool", "bitmap", "pull"):
+    got = distributed_build_labelling(g, landmarks, mesh, frontier_mode=mode)
+    assert (np.asarray(got.label_dist) == np.asarray(ref.label_dist)).all(), mode
+    assert (np.asarray(got.meta_w) == np.asarray(ref.meta_w)).all(), mode
+    assert (np.asarray(got.meta_dist) == np.asarray(ref.meta_dist)).all(), mode
+
+idx = QbSIndex(g, ref)
+serve = make_serve_step(idx.ctx, ref, mesh, n_vertices=g.n_vertices)
+rng = np.random.default_rng(0)
+cand = np.flatnonzero(~np.asarray(ref.is_landmark))
+us = rng.choice(cand, size=32).astype(np.int32)
+vs = rng.choice(cand, size=32).astype(np.int32)
+mask, dist = serve(jnp.asarray(us), jnp.asarray(vs))
+mask = np.asarray(mask)
+for k in range(32):
+    o = bfs_spg(g, int(us[k]), int(vs[k]))
+    m = mask[k] | mask[k][idx._rev_edge]
+    pairs = {
+        (int(min(a, b)), int(max(a, b)))
+        for a, b in zip(np.asarray(g.src)[m], np.asarray(g.dst)[m])
+    }
+    assert int(dist[k]) == o.dist, k
+    assert pairs == o.edge_pairs(g), k
+print("ALL-OK")

@@ -1,0 +1,23 @@
+"""Subprocess helper: vertex-sharded serving exactness on 8 host devices."""
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import INF, QbSIndex, gnp_random_graph, grid_graph
+from repro.core.baselines import bfs_spg
+from repro.core.scale_serve import scale_serve
+
+assert len(jax.devices()) == 8
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+for g, nl in [(gnp_random_graph(60, 3.5, seed=42), 5), (grid_graph(7, 7), 4)]:
+    idx = QbSIndex.build(g, n_landmarks=nl)
+    rng = np.random.default_rng(0)
+    cand = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
+    us = rng.choice(cand, size=8).astype(np.int32)
+    vs = rng.choice(cand, size=8).astype(np.int32)
+    pairs, dist = scale_serve(g, idx.scheme, mesh, us, vs)
+    for k in range(8):
+        o = bfs_spg(g, int(us[k]), int(vs[k]))
+        assert min(int(dist[k]), INF) == min(o.dist, INF), (us[k], vs[k])
+        assert pairs[k] == o.edge_pairs(g), (us[k], vs[k])
+print("ALL-OK")

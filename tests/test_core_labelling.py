@@ -1,0 +1,142 @@
+"""Labelling-scheme invariants (Definitions 4.1/4.2, Lemma 5.2)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    INF,
+    build_labelling,
+    gnp_random_graph,
+    labelling_size_bytes,
+    meta_apsp,
+    select_landmarks,
+    to_networkx,
+)
+from repro.core.baselines import bfs_distances
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = gnp_random_graph(40, 3.0, seed=17)
+    landmarks = select_landmarks(g, 5)
+    scheme = build_labelling(g, landmarks)
+    return g, landmarks, scheme
+
+
+def test_label_distances_are_exact(setup):
+    """Every label entry (r, delta) must satisfy delta == d_G(v, r)."""
+    g, landmarks, scheme = setup
+    ld = np.asarray(scheme.label_dist)
+    for i, r in enumerate(landmarks):
+        true = bfs_distances(g, int(r))
+        valid = ld[:, i] < INF
+        assert (ld[valid, i] == true[valid]).all()
+
+
+def test_label_iff_landmark_free_path(setup):
+    """Definition 4.2: (r, d) in L(u) iff some shortest u-r path has no other
+    landmark in its interior.  Checked against networkx all_shortest_paths."""
+    import networkx as nx
+
+    g, landmarks, scheme = setup
+    nxg = to_networkx(g)
+    lset = set(int(x) for x in landmarks)
+    ld = np.asarray(scheme.label_dist)
+    for u in range(g.n_vertices):
+        if u in lset:
+            assert (ld[u] >= INF).all()  # landmarks carry no labels
+            continue
+        for i, r in enumerate(landmarks):
+            r = int(r)
+            if not nx.has_path(nxg, u, r):
+                assert ld[u, i] >= INF
+                continue
+            free = any(
+                all(x not in lset for x in p[:-1] if x != u)
+                for p in nx.all_shortest_paths(nxg, u, r)
+            )
+            assert (ld[u, i] < INF) == free, (u, r)
+
+
+def test_meta_graph_definition(setup):
+    """Definition 4.1: meta edge (r, r') iff some shortest path between them
+    avoids all other landmarks; weight = d_G(r, r')."""
+    import networkx as nx
+
+    g, landmarks, scheme = setup
+    nxg = to_networkx(g)
+    lset = set(int(x) for x in landmarks)
+    mw = np.asarray(scheme.meta_w)
+    for i, r in enumerate(landmarks):
+        for j, r2 in enumerate(landmarks):
+            if i == j:
+                continue
+            r, r2 = int(r), int(r2)
+            if not nx.has_path(nxg, r, r2):
+                assert mw[i, j] >= INF
+                continue
+            free = any(
+                all(x not in (lset - {r, r2}) for x in p)
+                for p in nx.all_shortest_paths(nxg, r, r2)
+            )
+            if free:
+                assert mw[i, j] == nx.shortest_path_length(nxg, r, r2)
+            else:
+                assert mw[i, j] >= INF
+
+
+def test_meta_apsp_equals_true_distances(setup):
+    """d_M(r,r') == d_G(r,r') (§4.1: the meta graph preserves distances)."""
+    g, landmarks, scheme = setup
+    md = np.asarray(scheme.meta_dist)
+    for i, r in enumerate(landmarks):
+        true = bfs_distances(g, int(r))
+        for j, r2 in enumerate(landmarks):
+            t = true[int(r2)]
+            if t >= INF:
+                assert md[i, j] >= INF
+            else:
+                assert md[i, j] == t
+
+
+def test_determinism_wrt_landmark_order(setup):
+    """Lemma 5.2: the scheme is deterministic w.r.t. the landmark *set* —
+    permuting the order must permute, not change, the labelling."""
+    g, landmarks, scheme = setup
+    perm = np.array([3, 1, 4, 0, 2])
+    scheme2 = build_labelling(g, np.asarray(landmarks)[perm])
+    ld1 = np.asarray(scheme.label_dist)
+    ld2 = np.asarray(scheme2.label_dist)
+    assert (ld1[:, perm] == ld2).all()
+    mw1 = np.asarray(scheme.meta_w)
+    mw2 = np.asarray(scheme2.meta_w)
+    assert (mw1[np.ix_(perm, perm)] == mw2).all()
+
+
+def test_nearest_landmark_always_labelled(setup):
+    """A vertex's nearest landmark can never be pruned (interior landmark
+    would be strictly closer) — guarantees non-empty labels everywhere in a
+    connected component containing a landmark."""
+    g, landmarks, scheme = setup
+    ld = np.asarray(scheme.label_dist)
+    dists = np.stack([bfs_distances(g, int(r)) for r in landmarks], axis=1)
+    lset = set(int(x) for x in landmarks)
+    for u in range(g.n_vertices):
+        if u in lset or dists[u].min() >= INF:
+            continue
+        nearest = np.flatnonzero(dists[u] == dists[u].min())
+        assert (ld[u, nearest] < INF).all(), u
+
+
+def test_size_accounting():
+    g = gnp_random_graph(100, 4.0, seed=23)
+    scheme = build_labelling(g, select_landmarks(g, 8))
+    sz = labelling_size_bytes(scheme)
+    assert sz["label_bytes"] == 100 * 8
+    assert sz["n_meta_edges"] >= 0
+
+
+def test_meta_apsp_disconnected():
+    w = np.full((3, 3), INF, np.int64)
+    w[0, 1] = w[1, 0] = 2
+    d = np.asarray(meta_apsp(np.asarray(w, np.int32)))
+    assert d[0, 1] == 2 and d[0, 2] >= INF and d[0, 0] == 0

@@ -1,0 +1,163 @@
+"""End-to-end correctness of the QbS engine against exact oracles.
+
+The paper's central claim is exactness: the returned subgraph contains
+*exactly* all shortest paths (Theorem 5.1).  We check edge-set equality with
+a textbook two-BFS oracle, and independently with networkx on tiny graphs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    INF,
+    QbSIndex,
+    barabasi_albert_graph,
+    from_edges,
+    gnp_random_graph,
+    grid_graph,
+    ring_of_cliques,
+    to_networkx,
+)
+from repro.core.baselines import bfs_spg, bibfs_spg
+
+
+def assert_query_exact(g, idx, u, v):
+    o = bfs_spg(g, u, v)
+    r = idx.query(u, v)
+    assert r.dist == o.dist, (u, v, r.dist, o.dist)
+    assert r.edge_pairs(g) == o.edge_pairs(g), (
+        u, v,
+        sorted(r.edge_pairs(g) - o.edge_pairs(g)),
+        sorted(o.edge_pairs(g) - r.edge_pairs(g)),
+    )
+
+
+def test_paper_figure3_example():
+    """Fig. 3: SPG(3,7) must be the green subgraph (1-indexed)."""
+    edges = np.array([(1, 2), (1, 3), (2, 4), (2, 5), (2, 6), (3, 4), (5, 6), (5, 7)]) - 1
+    g = from_edges(edges, 7)
+    idx = QbSIndex.build(g, n_landmarks=2)
+    r = idx.query(2, 6)
+    assert r.dist == 4
+    assert r.edge_pairs(g) == {(0, 2), (0, 1), (2, 3), (1, 3), (1, 4), (4, 6)}
+
+
+def test_networkx_cross_validation():
+    g = gnp_random_graph(30, 3.0, seed=11)
+    nxg = to_networkx(g)
+    import networkx as nx
+
+    idx = QbSIndex.build(g, n_landmarks=4)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        u, v = int(rng.integers(0, 30)), int(rng.integers(0, 30))
+        r = idx.query(u, v)
+        if u == v:
+            assert r.dist == 0
+            continue
+        if not nx.has_path(nxg, u, v):
+            assert r.dist >= INF
+            assert r.edge_ids.size == 0
+            continue
+        paths = list(nx.all_shortest_paths(nxg, u, v))
+        want = {
+            (min(a, b), max(a, b))
+            for p in paths
+            for a, b in zip(p, p[1:])
+        }
+        assert r.dist == len(paths[0]) - 1
+        assert r.edge_pairs(g) == want
+
+
+@pytest.mark.parametrize("seed,nl", [(0, 1), (1, 3), (2, 5), (3, 8)])
+def test_random_graphs_match_oracle(seed, nl):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 50))
+    g = gnp_random_graph(n, 3.5, seed=seed + 50)
+    idx = QbSIndex.build(g, n_landmarks=min(nl, n // 3))
+    for _ in range(8):
+        assert_query_exact(g, idx, int(rng.integers(0, n)), int(rng.integers(0, n)))
+
+
+def test_hub_heavy_graph():
+    g = barabasi_albert_graph(80, 2, seed=3)
+    idx = QbSIndex.build(g, n_landmarks=6)
+    rng = np.random.default_rng(4)
+    for _ in range(8):
+        assert_query_exact(g, idx, int(rng.integers(0, 80)), int(rng.integers(0, 80)))
+
+
+def test_grid_many_tied_paths():
+    """Grids maximize shortest-path multiplicity (binomial many paths)."""
+    g = grid_graph(6, 6)
+    idx = QbSIndex.build(g, n_landmarks=4)
+    assert_query_exact(g, idx, 0, 35)  # corner to corner
+    assert_query_exact(g, idx, 0, 5)
+    assert_query_exact(g, idx, 7, 28)
+
+
+def test_flat_degree_graph():
+    g = ring_of_cliques(6, 5)
+    idx = QbSIndex.build(g, n_landmarks=5)
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        assert_query_exact(g, idx, int(rng.integers(0, 30)), int(rng.integers(0, 30)))
+
+
+def test_landmark_endpoint_queries():
+    g = gnp_random_graph(40, 3.0, seed=9)
+    idx = QbSIndex.build(g, n_landmarks=5)
+    lms = np.asarray(idx.scheme.landmarks)
+    assert_query_exact(g, idx, int(lms[0]), 7)
+    assert_query_exact(g, idx, 9, int(lms[1]))
+    assert_query_exact(g, idx, int(lms[0]), int(lms[2]))
+
+
+def test_trivial_and_adjacent_queries():
+    g = gnp_random_graph(25, 3.0, seed=13)
+    idx = QbSIndex.build(g, n_landmarks=3)
+    r = idx.query(4, 4)
+    assert r.dist == 0 and r.edge_ids.size == 0
+    # adjacent pair: SPG must be exactly that one edge
+    s = np.asarray(g.src)
+    d = np.asarray(g.dst)
+    real = s != d
+    u, v = int(s[real][0]), int(d[real][0])
+    if not bool(np.asarray(idx.scheme.is_landmark)[u] | np.asarray(idx.scheme.is_landmark)[v]):
+        r = idx.query(u, v)
+        assert r.dist == 1
+        assert r.edge_pairs(g) == {(min(u, v), max(u, v))}
+
+
+def test_disconnected_graph():
+    edges = np.array([(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)])
+    g = from_edges(edges, 7)  # vertex 6 isolated
+    idx = QbSIndex.build(g, n_landmarks=2)
+    r = idx.query(0, 4)
+    assert r.dist >= INF and r.edge_ids.size == 0
+    r = idx.query(6, 0)
+    assert r.dist >= INF and r.edge_ids.size == 0
+    assert_query_exact(g, idx, 0, 2)
+
+
+def test_batched_equals_single():
+    g = gnp_random_graph(35, 3.0, seed=21)
+    idx = QbSIndex.build(g, n_landmarks=4)
+    rng = np.random.default_rng(2)
+    us = rng.integers(0, 35, size=11)
+    vs = rng.integers(0, 35, size=11)
+    batch = idx.query_batch(us, vs)
+    for u, v, rb in zip(us, vs, batch):
+        r1 = idx.query(int(u), int(v))
+        assert r1.dist == rb.dist
+        assert set(r1.edge_ids.tolist()) == set(rb.edge_ids.tolist())
+
+
+def test_bibfs_baseline_matches_oracle():
+    g = gnp_random_graph(40, 3.0, seed=31)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        u, v = int(rng.integers(0, 40)), int(rng.integers(0, 40))
+        o = bfs_spg(g, u, v)
+        b = bibfs_spg(g, u, v)
+        assert b.dist == o.dist
+        assert b.edge_pairs(g) == o.edge_pairs(g)

@@ -1,0 +1,115 @@
+"""Sketch invariants (Definition 4.5, Corollary 4.6, Eq. 3/4)."""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (
+    INF,
+    QbSIndex,
+    build_labelling,
+    compute_sketch_batch,
+    d_top_only,
+    gnp_random_graph,
+    select_landmarks,
+)
+from repro.core.baselines import bfs_distances
+
+
+def _setup(seed=29, n=45, nl=5):
+    g = gnp_random_graph(n, 3.0, seed=seed)
+    scheme = build_labelling(g, select_landmarks(g, nl))
+    return g, scheme
+
+
+def test_d_top_upper_bounds_distance():
+    """Corollary 4.6: d_top >= d_G(u, v)."""
+    g, scheme = _setup()
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, g.n_vertices, size=16)
+    vs = rng.integers(0, g.n_vertices, size=16)
+    sk = compute_sketch_batch(
+        scheme.label_dist[jnp.asarray(us)], scheme.label_dist[jnp.asarray(vs)],
+        scheme.meta_w, scheme.meta_dist,
+    )
+    for k, (u, v) in enumerate(zip(us, vs)):
+        d = bfs_distances(g, int(u))[int(v)]
+        assert int(sk.d_top[k]) >= min(int(d), INF)
+
+
+def test_d_top_exact_through_landmarks():
+    """For u, v whose every shortest path crosses a landmark, d_top == d_G."""
+    g, scheme = _setup()
+    is_l = np.asarray(scheme.is_landmark)
+    rng = np.random.default_rng(1)
+    found = 0
+    for _ in range(200):
+        u, v = int(rng.integers(0, g.n_vertices)), int(rng.integers(0, g.n_vertices))
+        if u == v or is_l[u] or is_l[v]:
+            continue
+        du = bfs_distances(g, u)
+        dv = bfs_distances(g, v)
+        d = du[v]
+        if d >= INF:
+            continue
+        # does some landmark sit on a shortest path?
+        lm_on = any(du[r] + dv[r] == d for r in np.asarray(scheme.landmarks))
+        sk = compute_sketch_batch(
+            scheme.label_dist[jnp.asarray([u])], scheme.label_dist[jnp.asarray([v])],
+            scheme.meta_w, scheme.meta_dist,
+        )
+        if lm_on:
+            assert int(sk.d_top[0]) == int(d)
+            found += 1
+    assert found > 0  # the regime was actually exercised
+
+
+def test_sketch_edges_attain_minimum():
+    g, scheme = _setup()
+    rng = np.random.default_rng(2)
+    us = rng.integers(0, g.n_vertices, size=8)
+    vs = rng.integers(0, g.n_vertices, size=8)
+    lu = scheme.label_dist[jnp.asarray(us)]
+    lv = scheme.label_dist[jnp.asarray(vs)]
+    sk = compute_sketch_batch(lu, lv, scheme.meta_w, scheme.meta_dist)
+    lu_n, lv_n = np.asarray(lu), np.asarray(lv)
+    md = np.asarray(scheme.meta_dist)
+    for b in range(8):
+        dt = int(sk.d_top[b])
+        du_land = np.asarray(sk.du_land[b])
+        dv_land = np.asarray(sk.dv_land[b])
+        for r in np.flatnonzero(du_land < INF):
+            # r participates in a pair attaining d_top
+            best = (lu_n[b, r] + md[r, :] + lv_n[b, :]).min()
+            assert best == dt
+            assert du_land[r] == lu_n[b, r]
+        for r2 in np.flatnonzero(dv_land < INF):
+            best = (lu_n[b, :] + md[:, r2] + lv_n[b, r2]).min()
+            assert best == dt
+
+
+def test_budgets_eq4():
+    g, scheme = _setup()
+    rng = np.random.default_rng(3)
+    us = rng.integers(0, g.n_vertices, size=8)
+    vs = rng.integers(0, g.n_vertices, size=8)
+    sk = compute_sketch_batch(
+        scheme.label_dist[jnp.asarray(us)], scheme.label_dist[jnp.asarray(vs)],
+        scheme.meta_w, scheme.meta_dist,
+    )
+    for b in range(8):
+        du_land = np.asarray(sk.du_land[b])
+        present = du_land < INF
+        want = max(int(du_land[present].max()) - 1, 0) if present.any() else 0
+        assert int(sk.d_star_u[b]) == want
+
+
+def test_d_top_only_matches_full_sketch():
+    g, scheme = _setup()
+    rng = np.random.default_rng(4)
+    us = rng.integers(0, g.n_vertices, size=32)
+    vs = rng.integers(0, g.n_vertices, size=32)
+    lu = scheme.label_dist[jnp.asarray(us)]
+    lv = scheme.label_dist[jnp.asarray(vs)]
+    sk = compute_sketch_batch(lu, lv, scheme.meta_w, scheme.meta_dist)
+    fast = d_top_only(lu, lv, scheme.meta_dist)
+    assert (np.asarray(fast) == np.asarray(sk.d_top)).all()

@@ -1,0 +1,121 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py.
+
+Kernels execute under ``interpret=True`` on CPU: the same BlockSpec tiling
+and kernel body the TPU would run, minus the hardware.
+"""
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+import jax.numpy as jnp
+
+from repro.core.graph import INF
+from repro.kernels import ref
+from repro.kernels.frontier import bitmap_expand
+from repro.kernels.minplus import minplus
+
+
+def _rand_dist(rng, shape, dtype, inf_frac=0.2):
+    x = rng.integers(0, 64, size=shape)
+    mask = rng.random(shape) < inf_frac
+    x = np.where(mask, INF, x)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),
+    (8, 20, 20),       # sketch shape: B queries x R landmarks
+    (32, 20, 20),
+    (128, 128, 128),   # exactly one tile
+    (130, 20, 50),     # ragged every dim
+    (256, 64, 129),
+    (5, 200, 7),       # K > one lane-width
+])
+@pytest.mark.parametrize("dtype", [jnp.int32])
+def test_minplus_matches_ref(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = _rand_dist(rng, (m, k), dtype)
+    b = _rand_dist(rng, (k, n), dtype)
+    got = minplus(a, b, interpret=True)
+    want = ref.minplus_ref(a, b)
+    assert got.dtype == want.dtype
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tm,tn", [(8, 128), (16, 256), (128, 128)])
+def test_minplus_tile_shapes(tm, tn):
+    rng = np.random.default_rng(0)
+    a = _rand_dist(rng, (100, 20), jnp.int32)
+    b = _rand_dist(rng, (20, 20), jnp.int32)
+    got = minplus(a, b, tm=tm, tn=tn, interpret=True)
+    assert_array_equal(np.asarray(got), np.asarray(ref.minplus_ref(a, b)))
+
+
+def test_minplus_inf_saturation():
+    """All-INF rows stay INF-dominated (no wraparound)."""
+    a = jnp.full((4, 4), INF, jnp.int32)
+    b = jnp.full((4, 4), INF, jnp.int32)
+    got = np.asarray(minplus(a, b, interpret=True))
+    assert (got >= 2 * INF).all()
+
+
+@pytest.mark.parametrize("r,v", [
+    (1, 1),
+    (8, 128),
+    (20, 100),     # labelling shape: R landmarks x V block
+    (20, 257),     # ragged
+    (3, 300),
+    (64, 512),
+])
+def test_bitmap_expand_matches_ref(r, v):
+    rng = np.random.default_rng(r * 100 + v)
+    frontier = jnp.asarray(rng.random((r, v)) < 0.1)
+    adj = rng.random((v, v)) < 0.05
+    adj = np.triu(adj, 1)
+    adj = jnp.asarray(adj | adj.T)
+    got = bitmap_expand(frontier, adj, interpret=True)
+    want = ref.bitmap_expand_ref(frontier, adj)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tk", [128, 256])
+def test_bitmap_expand_k_grid_accumulation(tk):
+    """Multi-step K-grid must accumulate across adjacency column blocks."""
+    rng = np.random.default_rng(5)
+    frontier = jnp.asarray(rng.random((8, 300)) < 0.2)
+    adj = rng.random((300, 300)) < 0.03
+    adj = np.triu(adj, 1)
+    adj = jnp.asarray(adj | adj.T)
+    got = bitmap_expand(frontier, adj, tk=tk, interpret=True)
+    assert_array_equal(np.asarray(got), np.asarray(ref.bitmap_expand_ref(frontier, adj)))
+
+
+def test_bitmap_expand_is_bfs_step():
+    """Kernel output == one level of BFS on a path graph."""
+    v = 40
+    adj = np.zeros((v, v), bool)
+    for i in range(v - 1):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    frontier = np.zeros((2, v), bool)
+    frontier[0, 0] = True
+    frontier[1, 20] = True
+    got = np.asarray(bitmap_expand(jnp.asarray(frontier), jnp.asarray(adj), interpret=True))
+    assert got[0].nonzero()[0].tolist() == [1]
+    assert got[1].nonzero()[0].tolist() == [19, 21]
+
+
+def test_sketch_d_top_pallas_path_matches_core():
+    """Pallas sketching fast path == core sketch d_top on a real labelling."""
+    from repro.core import build_labelling, compute_sketch_batch, gnp_random_graph, select_landmarks
+    from repro.kernels import sketch_d_top
+
+    g = gnp_random_graph(60, 3.0, seed=2)
+    scheme = build_labelling(g, select_landmarks(g, 6))
+    rng = np.random.default_rng(3)
+    us = jnp.asarray(rng.integers(0, 60, size=16))
+    vs = jnp.asarray(rng.integers(0, 60, size=16))
+    lu = scheme.label_dist[us]
+    lv = scheme.label_dist[vs]
+    sk = compute_sketch_batch(lu, lv, scheme.meta_w, scheme.meta_dist)
+    got = sketch_d_top(lu, lv, scheme.meta_dist)
+    assert_array_equal(np.minimum(np.asarray(got), INF), np.asarray(sk.d_top))

@@ -1,0 +1,108 @@
+"""Equivalence tests for the §Perf optimization variants: every beyond-
+baseline path must produce the same math as its baseline."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.moe import init_moe, moe, moe_onehot, moe_sort
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = replace(get_config("dbrx-132b").reduced(), moe_capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    return cfg, p, x
+
+
+def test_moe_grouped_equals_global_when_capacity_free(moe_setup):
+    cfg, p, x = moe_setup
+    o0, a0 = jax.jit(lambda p, x: moe_onehot(p, x, cfg))(p, x)
+    cfg_g = replace(cfg, moe_group_size=32)
+    oG, aG = jax.jit(lambda p, x: moe_onehot(p, x, cfg_g))(p, x)
+    np.testing.assert_allclose(np.asarray(o0, np.float32),
+                               np.asarray(oG, np.float32), atol=2e-2)
+    assert abs(float(a0) - float(aG)) < 1e-5
+
+
+def test_moe_sort_equals_onehot(moe_setup):
+    cfg, p, x = moe_setup
+    o0, _ = jax.jit(lambda p, x: moe_onehot(p, x, cfg))(p, x)
+    o1, _ = jax.jit(lambda p, x: moe_sort(p, x, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(o0, np.float32),
+                               np.asarray(o1, np.float32), atol=2e-2)
+
+
+def test_moe_dispatch_config_switch(moe_setup):
+    cfg, p, x = moe_setup
+    o_sort, _ = jax.jit(lambda p, x: moe(p, x, replace(cfg, moe_dispatch="sort")))(p, x)
+    o_hot, _ = jax.jit(lambda p, x: moe(p, x, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(o_sort, np.float32),
+                               np.asarray(o_hot, np.float32), atol=2e-2)
+
+
+def test_chunked_attention_equals_naive():
+    cfg = get_config("qwen1.5-32b").reduced()
+    cfg_f = replace(cfg, attn_impl="chunked", attn_chunk=16)
+    m0, mf = build_model(cfg), build_model(cfg_f)
+    params = m0.init(jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 64)), jnp.int32)}
+    l0, _ = jax.jit(m0.forward)(params, batch=batch)
+    lf, _ = jax.jit(mf.forward)(params, batch=batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(lf), atol=5e-2)
+
+
+def test_chunked_attention_encoder_path():
+    cfg = replace(get_config("hubert-xlarge").reduced(),
+                  attn_impl="chunked", attn_chunk=16)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    batch = {
+        "features": jnp.asarray(rng.normal(size=(2, 64, cfg.frontend_dim)), jnp.float32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+        "loss_mask": jnp.asarray(rng.random((2, 64)) < 0.3),
+    }
+    loss, _ = jax.jit(m.loss)(params, batch=batch)
+    assert np.isfinite(float(loss))
+
+
+def test_layer_remat_same_loss_and_grads():
+    cfg = get_config("deepseek-7b").reduced()
+    cfg_r = replace(cfg, remat_policy="layer")
+    m0, mr = build_model(cfg), build_model(cfg_r)
+    params = m0.init(jax.random.PRNGKey(3))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 32)), jnp.int32)}
+
+    def loss_of(model):
+        return jax.jit(jax.value_and_grad(lambda p: model.loss(p, batch=batch)[0]))
+
+    l0, g0 = loss_of(m0)(params)
+    lr, gr = loss_of(mr)(params)
+    assert abs(float(l0) - float(lr)) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-3)
+
+
+def test_remat_hybrid_and_ssm_paths():
+    for arch in ("zamba2-2.7b", "rwkv6-1.6b"):
+        cfg = replace(get_config(arch).reduced(), remat_policy="layer")
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 32)), jnp.int32)}
+        loss, grads = jax.jit(
+            jax.value_and_grad(lambda p: m.loss(p, batch=batch)[0]))(params)
+        assert np.isfinite(float(loss)), arch
+        assert all(np.isfinite(np.asarray(g, np.float32)).all()
+                   for g in jax.tree_util.tree_leaves(grads)), arch

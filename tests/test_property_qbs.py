@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the system's invariants.
+
+Graphs are padded to fixed (V, E) buckets so every example reuses one jit
+cache entry (isolated pad vertices + self-loop pad edges are BFS no-ops).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import INF, QbSIndex, from_edges
+from repro.core.baselines import bfs_spg
+
+V_BUCKET = 48
+E_BUCKET = 512  # directed slots
+
+
+@st.composite
+def padded_graphs(draw):
+    n = draw(st.integers(min_value=6, max_value=V_BUCKET - 1))
+    m = draw(st.integers(min_value=n // 2, max_value=min(3 * n, E_BUCKET // 2 - 4)))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    g = from_edges(edges, n, pad_vertices_to=V_BUCKET, pad_edges_to=E_BUCKET)
+    return g, n, seed
+
+
+@given(padded_graphs(), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_qbs_spg_equals_oracle(gn, nl_choice):
+    g, n, seed = gn
+    rng = np.random.default_rng(seed ^ 0xABCD)
+    nl = [1, 2, 4, 6][nl_choice]
+    # restrict landmark choice to real (non-pad) vertices
+    deg = np.asarray(g.degrees())[:n]
+    landmarks = np.sort(np.argsort(-deg)[:nl]).astype(np.int32)
+    idx = QbSIndex.build(g, landmarks=landmarks)
+    for _ in range(3):
+        u = int(rng.integers(0, n))
+        v = int(rng.integers(0, n))
+        o = bfs_spg(g, u, v)
+        r = idx.query(u, v)
+        assert r.dist == o.dist, (u, v, r.dist, o.dist)
+        assert r.edge_pairs(g) == o.edge_pairs(g), (u, v)
+
+
+@given(padded_graphs())
+@settings(max_examples=15, deadline=None)
+def test_spg_structural_invariants(gn):
+    """Every returned SPG is a union of shortest paths: each edge lies on a
+    shortest u-v path; u and v are in the vertex set when connected."""
+    g, n, seed = gn
+    rng = np.random.default_rng(seed ^ 0x1234)
+    deg = np.asarray(g.degrees())[:n]
+    landmarks = np.sort(np.argsort(-deg)[:3]).astype(np.int32)
+    idx = QbSIndex.build(g, landmarks=landmarks)
+    u = int(rng.integers(0, n))
+    v = int(rng.integers(0, n))
+    r = idx.query(u, v)
+    if r.dist >= INF:
+        assert r.edge_ids.size == 0
+        return
+    if r.dist == 0:
+        return
+    from repro.core.baselines import bfs_distances
+
+    du = bfs_distances(g, u)
+    dv = bfs_distances(g, v)
+    verts = r.vertices(g)
+    assert u in verts and v in verts
+    for a, b in r.edge_pairs(g):
+        on = (du[a] + 1 + dv[b] == r.dist) or (du[b] + 1 + dv[a] == r.dist)
+        assert on, (a, b, r.dist, du[a], dv[a], du[b], dv[b])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_labelling_deterministic_under_permutation(seed, nl):
+    from repro.core import build_labelling, select_landmarks
+
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, V_BUCKET - 1, size=(60, 2))
+    g = from_edges(edges, V_BUCKET - 1, pad_vertices_to=V_BUCKET, pad_edges_to=E_BUCKET)
+    landmarks = select_landmarks(g, nl)
+    perm = rng.permutation(nl)
+    s1 = build_labelling(g, landmarks)
+    s2 = build_labelling(g, np.asarray(landmarks)[perm])
+    assert (np.asarray(s1.label_dist)[:, perm] == np.asarray(s2.label_dist)).all()

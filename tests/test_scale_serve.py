@@ -1,0 +1,48 @@
+"""Vertex-sharded (billion-scale layout) serving == exact oracle, on
+1-device and 8-device meshes."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import INF, QbSIndex, gnp_random_graph, grid_graph
+from repro.core.baselines import bfs_spg
+from repro.core.scale_serve import scale_serve
+
+
+def _check(mesh, g, nl, n_q=6, seed=0):
+    idx = QbSIndex.build(g, n_landmarks=nl)
+    rng = np.random.default_rng(seed)
+    cand = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
+    us = rng.choice(cand, size=n_q).astype(np.int32)
+    vs = rng.choice(cand, size=n_q).astype(np.int32)
+    pairs, dist = scale_serve(g, idx.scheme, mesh, us, vs)
+    for k in range(n_q):
+        o = bfs_spg(g, int(us[k]), int(vs[k]))
+        assert min(int(dist[k]), INF) == min(o.dist, INF), (us[k], vs[k])
+        assert pairs[k] == o.edge_pairs(g), (us[k], vs[k])
+
+
+def test_scale_serve_single_device_mesh():
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    _check(mesh, gnp_random_graph(50, 3.5, seed=11), nl=4)
+    _check(mesh, grid_graph(6, 6), nl=3)
+
+
+@pytest.mark.slow
+def test_scale_serve_eight_devices_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "helpers", "scale_serve_check.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ALL-OK" in out.stdout
