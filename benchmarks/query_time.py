@@ -1,15 +1,28 @@
-"""Table 2 (right) + Figure 11: average query time.
+"""Table 2 (right) + Figure 11: average query time, plus old-vs-new serving.
 
 QbS (sketch + guided search, batched) vs Bi-BFS (the paper's search
 baseline) vs PPL / ParentPPL (recursive label queries, capped sizes).
 Times are per query, amortized over a batch — the TPU-native serving mode
 (DESIGN.md §2); Bi-BFS is batched identically so the comparison is fair.
+
+``serving_rows`` additionally reports queries/sec for the two serving
+paths over the same query stream:
+
+* old — ``QbSIndex.query_batch_legacy``: the seed per-chunk Python loop
+  (host-side (B, E) symmetrization gather + per-query ``np.flatnonzero``
+  inside the loop, pure-jnp sketch).
+* new — ``QbSIndex.query_batch``: the persistent jitted pipeline (Pallas
+  min-plus sketch, device-side symmetrization, one host sync per chunk).
+
+A 10k-vertex synthetic graph (at the default --scale 1.0) is always
+included so the comparison covers the scale regime the serving rework
+targets.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import QbSIndex, select_landmarks
+from repro.core import QbSIndex, gnp_random_graph
 from repro.core.baselines import PPLIndex, bibfs_spg_batch
 
 from .common import bench_suite, emit, sample_queries, time_call
@@ -17,6 +30,39 @@ from .common import bench_suite, emit, sample_queries, time_call
 PPL_CAP = 1_500
 PARENT_CAP = 600
 N_QUERIES = 64
+
+
+def serving_rows(g, name: str, n_queries: int = N_QUERIES,
+                 seed: int = 7, idx: QbSIndex | None = None,
+                 queries: tuple | None = None,
+                 new_timing: tuple | None = None) -> list[tuple]:
+    """Old vs new serving path on one graph: per-query µs + queries/sec.
+
+    ``queries=(us, vs)`` supplies the query sample; ``new_timing=(dt,
+    results)`` reuses a measurement of the new path the caller already
+    took on that exact sample, so the suite loop doesn't time
+    ``query_batch`` twice.  Pass both together or neither."""
+    us, vs = queries if queries is not None else sample_queries(
+        g, n_queries, seed=seed)
+    n_queries = us.shape[0]
+    if idx is None:
+        idx = QbSIndex.build(g, n_landmarks=20, chunk=32)
+
+    dt_old, res_old = time_call(lambda: idx.query_batch_legacy(us, vs), repeat=2)
+    if new_timing is None:
+        dt_new, res_new = time_call(lambda: idx.query_batch(us, vs), repeat=2)
+    else:
+        dt_new, res_new = new_timing
+    assert [r.dist for r in res_old] == [r.dist for r in res_new]
+
+    qps_old = n_queries / max(dt_old, 1e-9)
+    qps_new = n_queries / max(dt_new, 1e-9)
+    return [
+        (f"query/qbs_old/{name}", dt_old / n_queries * 1e6,
+         f"qps={qps_old:.0f}"),
+        (f"query/qbs_new/{name}", dt_new / n_queries * 1e6,
+         f"qps={qps_new:.0f},speedup_vs_old={dt_old / max(dt_new, 1e-9):.2f}x"),
+    ]
 
 
 def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
@@ -35,6 +81,9 @@ def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
         rows.append((f"query/bibfs/{bg.name}", dt_b / N_QUERIES * 1e6,
                      f"qbs_speedup={dt_b / max(dt, 1e-9):.2f}x"))
 
+        rows.extend(serving_rows(g, bg.name, idx=idx, queries=(us, vs),
+                                 new_timing=(dt, res)))
+
         if g.n_vertices <= PPL_CAP:
             ppl = PPLIndex(g)
             dt_p, _ = time_call(
@@ -52,6 +101,12 @@ def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
         else:
             rows.append((f"query/parentppl/{bg.name}", -1,
                          f"DNF-analog:V>{PARENT_CAP}"))
+
+    # serving-path comparison at the 10k-vertex scale the rework targets
+    # (respects --scale so quick runs stay quick)
+    n_big = max(1_000, int(10_000 * scale))
+    rows.extend(serving_rows(gnp_random_graph(n_big, 8.0, seed=5),
+                             f"gnp-{n_big}"))
 
     if sweep:  # Figure 11: query time vs |R|
         g = bench_suite(scale)[0].graph

@@ -1,0 +1,28 @@
+"""Version-compat shims for JAX API drift.
+
+``jax.shard_map`` only exists as a top-level name on newer JAX releases; on
+the pinned 0.4.x toolchain the attribute raises ``AttributeError`` through
+the deprecation machinery while the implementation lives in
+``jax.experimental.shard_map``.  The experimental version also lacks a
+replication rule for ``lax.while_loop`` (every labelling/serving program
+here carries a loop), so it must run with ``check_rep=False`` — the newer
+per-axis varying-type checker accepts those programs as written.
+Everything in this repo imports ``shard_map`` from here so a future JAX
+bump is a one-line change.
+"""
+from __future__ import annotations
+
+import jax
+
+_native = getattr(jax, "shard_map", None)
+
+if _native is not None:
+    shard_map = _native
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, /, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_exp(f, **kwargs)
+
+__all__ = ["shard_map"]

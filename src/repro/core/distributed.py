@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .graph import INF, Graph
 from .labelling import LabellingScheme, meta_apsp
 from .search import Query, SearchContext, guided_search
@@ -220,7 +221,7 @@ def make_labelling_step(
         return depth[None, :, :vloc], reach[None, :, :vloc]
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_body,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, rep),
@@ -364,7 +365,7 @@ def make_labelling_step_pull(
         return depth[None, :, :vloc], reach[None, :, :vloc]
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_body,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, rep, spec_e, spec_e, spec_e),
@@ -490,7 +491,7 @@ def make_serve_step(
     batch_spec = P(axis_names)
     rep = P()
     ctx_specs = SearchContext(*(rep for _ in ctx))
-    step_sharded = jax.shard_map(
+    step_sharded = shard_map(
         step,
         mesh=mesh,
         in_specs=(ctx_specs, rep, rep, rep, batch_spec, batch_spec),

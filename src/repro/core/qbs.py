@@ -7,6 +7,19 @@ Usage::
     res = index.query(u, v)              # one SPG
     res = index.query_batch(us, vs)      # batched serving
 
+The online path is a persistent fully-jitted pipeline: label gather ->
+sketch (Eq. 3 min-plus on the Pallas kernel when ``use_pallas=True``, the
+default; pure-jnp reference with ``use_pallas=False``) -> vmapped guided
+search -> device-side edge-mask symmetrization through the precomputed
+reverse-edge map.  Queries run in fixed-shape chunks of ``chunk`` lanes
+(one jit cache entry; ragged tails are padded with a repeated query and
+discarded), and each chunk costs exactly one host sync.
+``query_batch_arrays`` returns the raw (dist, edge_mask) arrays for
+serving; ``repro.serving.make_spg_serve_step`` exposes the jitted step
+itself.  ``query_batch_legacy`` preserves the original per-chunk host
+post-processing loop as the comparison baseline for benchmarks and
+bit-identity tests.
+
 Queries whose endpoint *is* a landmark are routed to the exact
 bidirectional-BFS path (the paper leaves this corner case implicit: a
 landmark endpoint has no label entries and no presence in G-).  They are a
@@ -51,6 +64,17 @@ class SPGResult:
         return out
 
 
+@jax.jit
+def _symmetrize(dist, mask, rev_edge):
+    """Device-side edge-mask symmetrization.  Jitted *separately* from the
+    search program: fused into it, the gather makes XLA pick a slower
+    layout for the loop-carried (B, E) edge mask (~25% per-chunk
+    regression on CPU); as its own program the gather costs single-digit
+    ms.  Module-level so all indexes share one compile cache entry —
+    nothing here is instance-specific."""
+    return dist, mask | mask[:, rev_edge]
+
+
 def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     key = src.astype(np.int64) * n + dst.astype(np.int64)
     rkey = dst.astype(np.int64) * n + src.astype(np.int64)
@@ -61,12 +85,17 @@ def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
 
 class QbSIndex:
     def __init__(self, graph: Graph, scheme: LabellingScheme, *,
-                 max_levels: int = 512, max_chain: int = 512, chunk: int = 32):
+                 max_levels: int = 512, max_chain: int = 512, chunk: int = 32,
+                 use_pallas: bool = True):
         self.graph = graph
         self.scheme = scheme
         self.max_levels = max_levels
         self.max_chain = max_chain
         self.chunk = chunk
+        # Read-only record of the construction choice: the jitted pipeline
+        # captures it below, so mutating this attribute has no effect —
+        # rebuild the index to switch sketch paths.
+        self.use_pallas = use_pallas
 
         is_l = scheme.is_landmark
         self.ctx = SearchContext(
@@ -81,6 +110,7 @@ class QbSIndex:
         self._rev_edge = _reverse_edge_map(
             np.asarray(graph.src), np.asarray(graph.dst), graph.n_vertices
         )
+        self._rev_edge_j = jnp.asarray(self._rev_edge)
         self._is_landmark_np = np.asarray(is_l)
 
         v = graph.n_vertices
@@ -88,20 +118,41 @@ class QbSIndex:
             guided_search, n_vertices=v,
             max_levels=max_levels, max_chain=max_chain,
         )
+        self._searcher = searcher
 
-        def run_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
+        def search_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
             lu = label_dist[us]
             lv = label_dist[vs]
-            sk = compute_sketch_batch(lu, lv, meta_w, meta_dist)
+            sk = compute_sketch_batch(lu, lv, meta_w, meta_dist,
+                                      use_pallas=use_pallas)
             queries = Query(
                 u=us, v=vs, d_top=sk.d_top,
                 du_land=sk.du_land, dv_land=sk.dv_land,
                 meta_edge=sk.meta_edge,
                 d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
             )
-            return jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
+            res = jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
+            return res.dist, res.edge_mask
 
-        self._run_batch = jax.jit(run_batch)
+        # Chained with the module-level _symmetrize program in serve_step:
+        # two jit dispatches, everything on device, no host sync (see
+        # _symmetrize for why the gather is not fused in here).
+        self._search_batch = jax.jit(search_batch)
+        self._run_batch_legacy_fn = None
+
+    def serve_step(self, us, vs):
+        """The persistent device pipeline for one fixed-shape query chunk:
+        sketch + guided search + edge-mask symmetrization.  Takes int32
+        device/host arrays ``(us, vs)`` of any fixed shape (B,) and returns
+        device arrays ``(dist (B,), edge_mask (B, E) bool)`` with no host
+        sync.  Public contract re-exported by
+        ``repro.serving.make_spg_serve_step``; landmark-endpoint lanes are
+        garbage here — ``query_batch`` routes them to Bi-BFS."""
+        d, m = self._search_batch(
+            self.ctx, self.scheme.label_dist, self.scheme.meta_w,
+            self.scheme.meta_dist, us, vs,
+        )
+        return _symmetrize(d, m, self._rev_edge_j)
 
     # -- construction -------------------------------------------------------
 
@@ -115,20 +166,117 @@ class QbSIndex:
 
     # -- queries -------------------------------------------------------------
 
+    def _serve_chunks(self, us: np.ndarray, vs: np.ndarray,
+                      normal: np.ndarray):
+        """Run the jitted pipeline over ``normal`` query indices in
+        fixed-shape chunks of ``self.chunk`` lanes (ragged tails padded
+        with a repeated query, pad lanes dropped).  Yields per chunk the
+        host tuple (live indices, dist (L,), edge_mask (L, E)); the
+        ``device_get`` per chunk is the only host sync.  Streaming chunks
+        keeps peak host memory at O(chunk * E) regardless of batch size."""
+        if normal.size == 0:
+            return
+        pad = (-normal.size) % self.chunk
+        padded = np.concatenate([normal, np.repeat(normal[-1:], pad)])
+        for start in range(0, padded.size, self.chunk):
+            sel = padded[start:start + self.chunk]
+            d, m = self.serve_step(jnp.asarray(us[sel]), jnp.asarray(vs[sel]))
+            d, m = jax.device_get((d, m))
+            live = min(self.chunk, normal.size - start)
+            yield sel[:live], d[:live], m[:live]
+
+    def _landmark_fallback(self, us: np.ndarray, vs: np.ndarray,
+                           lm_idx: np.ndarray) -> list[SPGResult]:
+        """Exact Bi-BFS answers for landmark-endpoint queries (single place
+        to change the fallback policy for both batch entry points)."""
+        from .baselines import bibfs_spg_batch
+        return bibfs_spg_batch(self.graph, us[lm_idx], vs[lm_idx],
+                               max_levels=self.max_levels)
+
+    def query_batch_arrays(self, us, vs) -> tuple[np.ndarray, np.ndarray]:
+        """Serving fast path: answer a query batch as raw arrays
+        (dist (N,) int32, edge_mask (N, E) bool, symmetrized) with no
+        per-query host objects.  Landmark-endpoint queries are routed to the
+        exact Bi-BFS fallback, like ``query_batch``."""
+        us = np.asarray(us, np.int32).reshape(-1)
+        vs = np.asarray(vs, np.int32).reshape(-1)
+        landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
+        dist = np.full((us.shape[0],), INF, np.int32)
+        mask = np.zeros((us.shape[0], self.graph.n_edges), bool)
+        for idx, d, m in self._serve_chunks(us, vs, np.flatnonzero(~landmark_q)):
+            dist[idx] = d
+            mask[idx] = m
+        if landmark_q.any():
+            lm_idx = np.flatnonzero(landmark_q)
+            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
+                dist[qi] = r.dist
+                mask[qi, r.edge_ids] = True
+        return dist, mask
+
     def query_batch(self, us, vs) -> list[SPGResult]:
+        us = np.asarray(us, np.int32).reshape(-1)
+        vs = np.asarray(vs, np.int32).reshape(-1)
+        n = us.shape[0]
+        landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
+        normal = np.flatnonzero(~landmark_q)
+
+        out: list[SPGResult | None] = [None] * n
+        for idx, d, m in self._serve_chunks(us, vs, normal):
+            for k, qi in enumerate(idx):
+                out[qi] = SPGResult(
+                    u=int(us[qi]), v=int(vs[qi]), dist=int(d[k]),
+                    edge_ids=np.flatnonzero(m[k]),
+                    d_top=int(d[k]) if d[k] < INF else INF,
+                )
+        if landmark_q.any():
+            lm_idx = np.flatnonzero(landmark_q)
+            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
+                out[qi] = r
+        return out  # type: ignore[return-value]
+
+    def query(self, u: int, v: int) -> SPGResult:
+        return self.query_batch([u], [v])[0]
+
+    # -- legacy path (pre-pipeline reference; benchmarks + bit-identity) -----
+
+    def _legacy_run_batch(self):
+        if self._run_batch_legacy_fn is None:
+            searcher = self._searcher
+
+            def run_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
+                lu = label_dist[us]
+                lv = label_dist[vs]
+                sk = compute_sketch_batch(lu, lv, meta_w, meta_dist)
+                queries = Query(
+                    u=us, v=vs, d_top=sk.d_top,
+                    du_land=sk.du_land, dv_land=sk.dv_land,
+                    meta_edge=sk.meta_edge,
+                    d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
+                )
+                return jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
+
+            self._run_batch_legacy_fn = jax.jit(run_batch)
+        return self._run_batch_legacy_fn
+
+    def query_batch_legacy(self, us, vs) -> list[SPGResult]:
+        """The seed serving loop, kept verbatim: per-chunk host gather for
+        symmetrization and per-query ``np.flatnonzero`` inside the loop.
+        Exists as the old-path baseline for ``benchmarks.query_time`` and as
+        the bit-identity oracle for ``query_batch``."""
         us = np.asarray(us, np.int32).reshape(-1)
         vs = np.asarray(vs, np.int32).reshape(-1)
         n = us.shape[0]
         landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
         out: list[SPGResult | None] = [None] * n
 
+        run = self._legacy_run_batch()
         normal = np.flatnonzero(~landmark_q)
         for start in range(0, normal.size, self.chunk):
             idx = normal[start:start + self.chunk]
             pad = self.chunk - idx.size
             cu = np.concatenate([us[idx], np.repeat(us[idx[-1:]], pad)])
             cv = np.concatenate([vs[idx], np.repeat(vs[idx[-1:]], pad)])
-            res: SearchResult = self._run_batch(
+            res: SearchResult = run(
                 self.ctx, self.scheme.label_dist, self.scheme.meta_w,
                 self.scheme.meta_dist, jnp.asarray(cu), jnp.asarray(cv),
             )
@@ -144,13 +292,7 @@ class QbSIndex:
                 )
 
         if landmark_q.any():
-            from .baselines import bibfs_spg_batch
             lm_idx = np.flatnonzero(landmark_q)
-            results = bibfs_spg_batch(self.graph, us[lm_idx], vs[lm_idx],
-                                      max_levels=self.max_levels)
-            for qi, r in zip(lm_idx, results):
+            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
                 out[qi] = r
         return out  # type: ignore[return-value]
-
-    def query(self, u: int, v: int) -> SPGResult:
-        return self.query_batch([u], [v])[0]

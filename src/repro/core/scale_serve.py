@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from .graph import INF, Graph
 from .labelling import LabellingScheme
 from .distributed import EdgePartition, _pack_bits, partition_edges
@@ -276,7 +277,7 @@ def make_scale_serve_step(
         return edge_mask[None], dist
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             body,
             mesh=mesh,
             in_specs=(spec_e, spec_e, spec_e, spec_e, spec_e,

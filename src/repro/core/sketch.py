@@ -6,10 +6,14 @@ A sketch for SPG(u, v) is the set of landmark paths attaining
 
 We compute it for a whole query batch as a min-plus semiring contraction
 (B,R) x (R,R) x (R,B): exactly the shape the Pallas kernel in
-``repro.kernels.minplus`` implements with VMEM tiling.  The structural part
-(which landmark pairs attain the min, which meta edges lie on their meta
-shortest paths) stays as masked dense ops over R^2/R^4 — with |R| = 20 these
-are tiny and fuse into the surrounding program.
+``repro.kernels.minplus`` implements with VMEM tiling.  Passing
+``use_pallas=True`` routes the Eq. 3 contraction through that kernel
+(interpreted on CPU, real VPU tiles on TPU); the default pure-jnp reduction
+is the reference fallback and what the shard_map programs use.  Both paths
+are bit-identical: the semiring is exact integer (min, +).  The structural
+part (which landmark pairs attain the min, which meta edges lie on their
+meta shortest paths) stays as masked dense ops over R^2/R^4 — with
+|R| = 20 these are tiny and fuse into the surrounding program.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import sketch_d_top as kernel_sketch_d_top
 from .graph import INF
 
 
@@ -43,6 +48,8 @@ def compute_sketch_batch(
     lv: jax.Array,           # (B, R)
     meta_w: jax.Array,       # (R, R) direct meta edge weights
     meta_dist: jax.Array,    # (R, R) d_M
+    *,
+    use_pallas: bool = False,
 ) -> SketchBatch:
     lu = lu.astype(jnp.int32)
     lv = lv.astype(jnp.int32)
@@ -50,7 +57,18 @@ def compute_sketch_batch(
     # pi[b, r, r'] = delta_ur + d_M(r,r') + delta_r'v  (clamped to INF)
     pi = lu[:, :, None] + meta_dist[None, :, :] + lv[:, None, :]
     pi = jnp.minimum(pi, INF)
-    d_top = pi.min(axis=(1, 2))
+    if use_pallas:
+        # Eq. 3 hot loop on the Pallas min-plus kernel (min is monotone, so
+        # clamping after the reduction matches the clamped-pi reduction).
+        # pi stays materialized either way for the attaining-pair masks
+        # below; the kernel replaces only the (B,R,R) reduction, so this
+        # route is about running the real serving path through the TPU
+        # kernel — a d_top-only pipeline (kernels.ops.sketch_d_top,
+        # d_top_only) is where it skips pi entirely.
+        d_top = jnp.minimum(
+            kernel_sketch_d_top(lu, lv, meta_dist.astype(jnp.int32)), INF)
+    else:
+        d_top = pi.min(axis=(1, 2))
     have = d_top < INF
 
     att = (pi == d_top[:, None, None]) & have[:, None, None]  # attaining pairs

@@ -1,3 +1,15 @@
-from .serve_step import greedy_generate, make_decode_step, make_prefill_step
+from .serve_step import (
+    greedy_generate,
+    make_decode_step,
+    make_prefill_step,
+    make_spg_serve_step,
+    serve_spg_batch,
+)
 
-__all__ = ["greedy_generate", "make_decode_step", "make_prefill_step"]
+__all__ = [
+    "greedy_generate",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_spg_serve_step",
+    "serve_spg_batch",
+]

@@ -1,20 +1,69 @@
-"""Serving steps for the LM architectures: prefill and single-token decode
-(the units the dry-run lowers for the decode_* / prefill_* shape cells),
-plus a simple batched greedy-decode driver for the examples.
+"""Serving steps: the QbS shortest-path-graph query pipeline and the LM
+prefill/decode units.
 
-KV caches support bf16 and int8 (per-position scales, see
-``models.layers``); int8 halves the decode memory term — the default for
-the 32k/500k cells where cache bytes dominate the roofline.
+**SPG serving** (``make_spg_serve_step`` / ``serve_spg_batch``): the
+persistent, fully-jitted batched pipeline over a built ``QbSIndex`` —
+label gather -> sketch (min-plus on the Pallas kernel when the index was
+built with ``use_pallas=True``, the default) -> vmapped guided search ->
+device-side edge-mask symmetrization.  The step is fixed-shape (``B =
+index.chunk`` lanes), returns device arrays with no host sync, and serves
+the non-landmark-endpoint traffic; ``serve_spg_batch`` adds host-side
+padding/routing for arbitrary batches (landmark endpoints fall back to
+exact Bi-BFS, same as ``QbSIndex.query_batch``).
+
+**LM serving**: prefill and single-token decode (the units the dry-run
+lowers for the decode_* / prefill_* shape cells), plus a simple batched
+greedy-decode driver for the examples.  KV caches support bf16 and int8
+(per-position scales, see ``models.layers``); int8 halves the decode
+memory term — the default for the 32k/500k cells where cache bytes
+dominate the roofline.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.registry import Model
+
+
+# ---------------------------------------------------------------------------
+# QbS shortest-path-graph serving
+# ---------------------------------------------------------------------------
+
+
+def make_spg_serve_step(index) -> Callable:
+    """Return the persistent jitted SPG serving step of a ``QbSIndex``.
+
+    The step maps int32 query arrays ``(us, vs)`` of shape ``(B,)`` (any
+    fixed B; reuse one B for one compile cache entry — ``index.chunk`` is
+    the canonical choice) to device arrays ``(dist (B,), edge_mask (B, E)
+    bool)``.  The edge mask is already symmetrized through the reverse-edge
+    map, so callers never touch the host ``(B, E)`` gather the legacy path
+    paid per chunk.  No host sync happens inside the step (two chained jit
+    dispatches: search program + symmetrization program; see
+    ``QbSIndex.__init__`` for why they are separate).
+
+    Landmark-endpoint queries are *not* handled here (they have no label
+    entries; the pipeline returns garbage lanes for them) — route them to
+    ``repro.core.baselines.bibfs_spg_batch`` as ``serve_spg_batch`` and
+    ``QbSIndex.query_batch`` do.
+    """
+    return index.serve_step
+
+
+def serve_spg_batch(index, us, vs) -> tuple[np.ndarray, np.ndarray]:
+    """Answer an arbitrary-size query batch through the jitted pipeline.
+
+    Host-side driver around ``make_spg_serve_step``: fixed-shape padded
+    chunks of ``index.chunk`` lanes, one host sync per chunk, exact Bi-BFS
+    fallback for landmark endpoints.  Returns ``(dist (N,) int32,
+    edge_mask (N, E) bool)``.
+    """
+    return index.query_batch_arrays(us, vs)
 
 
 def make_prefill_step(model: Model):

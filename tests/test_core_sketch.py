@@ -103,6 +103,22 @@ def test_budgets_eq4():
         assert int(sk.d_star_u[b]) == want
 
 
+def test_sketch_pallas_path_bit_identical():
+    """use_pallas=True (Eq. 3 on the kernel) == the pure-jnp reference,
+    field by field — the (min, +) semiring is exact integer arithmetic."""
+    g, scheme = _setup()
+    rng = np.random.default_rng(7)
+    us = rng.integers(0, g.n_vertices, size=24)
+    vs = rng.integers(0, g.n_vertices, size=24)
+    lu = scheme.label_dist[jnp.asarray(us)]
+    lv = scheme.label_dist[jnp.asarray(vs)]
+    ref = compute_sketch_batch(lu, lv, scheme.meta_w, scheme.meta_dist)
+    got = compute_sketch_batch(lu, lv, scheme.meta_w, scheme.meta_dist,
+                               use_pallas=True)
+    for name, a, b in zip(ref._fields, ref, got):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+
+
 def test_d_top_only_matches_full_sketch():
     g, scheme = _setup()
     rng = np.random.default_rng(4)

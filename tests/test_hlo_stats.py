@@ -40,12 +40,14 @@ def test_collective_parse_real_program():
     """psum under shard_map must show up as all-reduce bytes."""
     from jax.sharding import Mesh, PartitionSpec as P
 
+    from repro.compat import shard_map
+
     mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
 
     def f(a):
         return jax.lax.psum(a, "x")
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P()))
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P()))
     lowered = fn.lower(jax.ShapeDtypeStruct((256,), jnp.float32))
     text = lowered.compile().as_text()
     out = collective_bytes(text)

@@ -4,6 +4,9 @@ Graphs are padded to fixed (V, E) buckets so every example reuses one jit
 cache entry (isolated pad vertices + self-loop pad edges are BFS no-ops).
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import INF, QbSIndex, from_edges

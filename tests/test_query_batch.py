@@ -1,0 +1,125 @@
+"""Serving-path edge cases for ``QbSIndex.query_batch`` and the jitted
+pipeline: landmark-endpoint routing (bibfs fallback), u == v trivial
+queries, ragged batches that exercise the fixed-shape padding, and
+bit-identity between the new pipeline and the seed (legacy) loop."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import INF, QbSIndex, gnp_random_graph, grid_graph
+from repro.core.baselines import bfs_spg
+from repro.serving import make_spg_serve_step, serve_spg_batch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = gnp_random_graph(45, 3.2, seed=17)
+    idx = QbSIndex.build(g, n_landmarks=5, chunk=8)
+    return g, idx
+
+
+def _assert_matches_oracle(g, res):
+    for r in res:
+        o = bfs_spg(g, r.u, r.v)
+        assert r.dist == o.dist, (r.u, r.v, r.dist, o.dist)
+        assert r.edge_pairs(g) == o.edge_pairs(g), (r.u, r.v)
+
+
+def test_landmark_endpoint_batch(setup):
+    """Every query touches a landmark endpoint -> all routed to bibfs."""
+    g, idx = setup
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
+    us = np.array([lms[0], lms[1], non[0], lms[2], lms[0]], np.int32)
+    vs = np.array([non[1], lms[2], lms[3], lms[4], lms[0]], np.int32)  # incl. lm-lm, lm==lm
+    res = idx.query_batch(us, vs)
+    _assert_matches_oracle(g, res)
+
+
+def test_trivial_u_equals_v_batch(setup):
+    g, idx = setup
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
+    us = np.array([non[0], lms[0], non[3], non[3]], np.int32)
+    vs = np.array([non[0], lms[0], non[3], non[4]], np.int32)
+    res = idx.query_batch(us, vs)
+    for r in res[:3]:
+        assert r.dist == 0 and r.edge_ids.size == 0
+    _assert_matches_oracle(g, res)
+
+
+def test_ragged_batch_exercises_padding(setup):
+    """Batch size not a multiple of chunk: the tail chunk is padded with a
+    repeated query whose lanes must be discarded."""
+    g, idx = setup
+    assert idx.chunk == 8
+    rng = np.random.default_rng(3)
+    for n in (1, 7, 11, 19):  # 1 partial, partial, 1 full + partial, 2 + partial
+        us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+        vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+        res = idx.query_batch(us, vs)
+        assert len(res) == n
+        _assert_matches_oracle(g, res)
+
+
+def test_empty_and_all_landmark_batches(setup):
+    g, idx = setup
+    assert idx.query_batch([], []) == []
+    lms = np.asarray(idx.scheme.landmarks)
+    res = idx.query_batch(lms[:3], lms[1:4])
+    _assert_matches_oracle(g, res)
+
+
+def test_bit_identical_to_legacy(setup):
+    """Acceptance: dist + edge sets bit-identical to the seed implementation
+    on randomized batches including landmark-endpoint and u==v queries."""
+    g, idx = setup
+    rng = np.random.default_rng(11)
+    lms = np.asarray(idx.scheme.landmarks)
+    for trial in range(3):
+        n = int(rng.integers(5, 30))
+        us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+        vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+        # force the corner cases into every batch
+        us[0] = vs[0] = int(rng.integers(0, g.n_vertices))      # u == v
+        us[1] = int(lms[trial % lms.size])                       # landmark endpoint
+        new = idx.query_batch(us, vs)
+        old = idx.query_batch_legacy(us, vs)
+        for rn, ro in zip(new, old):
+            assert (rn.u, rn.v) == (ro.u, ro.v)
+            assert rn.dist == ro.dist, (rn.u, rn.v)
+            assert rn.d_top == ro.d_top, (rn.u, rn.v)
+            assert np.array_equal(rn.edge_ids, ro.edge_ids), (rn.u, rn.v)
+
+
+def test_query_batch_arrays_matches_results(setup):
+    g, idx = setup
+    rng = np.random.default_rng(23)
+    us = rng.integers(0, g.n_vertices, size=13).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=13).astype(np.int32)
+    dist, mask = serve_spg_batch(idx, us, vs)
+    res = idx.query_batch(us, vs)
+    for k, r in enumerate(res):
+        assert int(dist[k]) == r.dist
+        assert np.array_equal(np.flatnonzero(mask[k]), r.edge_ids)
+
+
+def test_spg_serve_step_matches_query_batch():
+    """The raw jitted step == query_batch on non-landmark traffic, on a
+    graph with many tied shortest paths (edge-mask stress)."""
+    g = grid_graph(6, 6)
+    idx = QbSIndex.build(g, n_landmarks=4, chunk=8)
+    step = make_spg_serve_step(idx)
+    rng = np.random.default_rng(5)
+    cand = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
+    us = rng.choice(cand, size=idx.chunk).astype(np.int32)
+    vs = rng.choice(cand, size=idx.chunk).astype(np.int32)
+    dist, mask = step(jnp.asarray(us), jnp.asarray(vs))
+    dist, mask = np.asarray(dist), np.asarray(mask)
+    res = idx.query_batch(us, vs)
+    for k, r in enumerate(res):
+        assert int(dist[k]) == r.dist
+        assert np.array_equal(np.flatnonzero(mask[k]), r.edge_ids)
+        o = bfs_spg(g, int(us[k]), int(vs[k]))
+        assert r.edge_pairs(g) == o.edge_pairs(g)

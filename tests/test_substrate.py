@@ -162,6 +162,7 @@ def test_async_checkpoint(tmp_path):
 def test_compressed_psum_shard_map():
     """bf16/int8-EF psum == exact psum within tolerance on a 1-dev mesh."""
     from jax.sharding import Mesh
+    from repro.compat import shard_map
     from repro.distributed import psum_bf16, psum_int8_ef
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -171,14 +172,14 @@ def test_compressed_psum_shard_map():
     def body(g):
         return psum_bf16(g, ("data",))
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=({"w": jax.sharding.PartitionSpec()},),
-                                out_specs={"w": jax.sharding.PartitionSpec()}))(g)
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=({"w": jax.sharding.PartitionSpec()},),
+                            out_specs={"w": jax.sharding.PartitionSpec()}))(g)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]), rtol=1e-2, atol=1e-2)
 
     def body2(g, e):
         return psum_int8_ef(g, e, ("data",))
 
-    out2, err = jax.jit(jax.shard_map(
+    out2, err = jax.jit(shard_map(
         body2, mesh=mesh,
         in_specs=({"w": jax.sharding.PartitionSpec()}, {"w": jax.sharding.PartitionSpec()}),
         out_specs=({"w": jax.sharding.PartitionSpec()}, {"w": jax.sharding.PartitionSpec()})))(g, e0)
