@@ -22,7 +22,15 @@ def main() -> None:
     scale = 0.25 if args.quick else args.scale
     sweep = not args.quick
 
-    from . import construction, coverage, distance_dist, label_size, query_time, sketch_kernel
+    from . import (
+        construction,
+        coverage,
+        distance_dist,
+        frontier_relay,
+        label_size,
+        query_time,
+        sketch_kernel,
+    )
     from .common import emit
 
     t0 = time.time()
@@ -33,6 +41,7 @@ def main() -> None:
         (label_size, {"sweep": sweep}),
         (query_time, {"sweep": sweep}),
         (coverage, {}),
+        (frontier_relay, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))

@@ -1,17 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the one command builders and CI both run.
 #
-# Mirrors ROADMAP.md's tier-1 command with (a) the slow multi-device
-# subprocess tests deselected and (b) the 4 known pre-existing LM-side
-# failures deselected (tracked in ROADMAP Open items) so the exit code is
-# a usable regression gate: green unless the diff broke something.
-# Remove a --deselect line when its test is fixed; extra args are
-# forwarded to pytest.
+# Mirrors ROADMAP.md's tier-1 command with the slow multi-device subprocess
+# tests deselected so the exit code is a usable regression gate: green
+# unless the diff broke something.  Extra args are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" \
-  --deselect "tests/test_arch_smoke.py::test_prefill_decode_matches_forward[dbrx-132b]" \
-  --deselect "tests/test_arch_smoke.py::test_prefill_decode_matches_forward[phi3.5-moe-42b-a6.6b]" \
-  --deselect "tests/test_perf_variants.py::test_layer_remat_same_loss_and_grads" \
-  --deselect "tests/test_substrate.py::test_loss_decreases" \
-  "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" "$@"

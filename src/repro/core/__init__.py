@@ -12,9 +12,10 @@ from .graph import (
     select_landmarks,
     to_networkx,
 )
+from .frontier import FrontierEngine, HubSplit, make_relay, segment_or
 from .labelling import LabellingScheme, build_labelling, labelling_size_bytes, meta_apsp
 from .qbs import QbSIndex, SPGResult
-from .search import Query, SearchContext, SearchResult, guided_search
+from .search import Query, SearchContext, SearchResult, guided_search, make_search_context
 from .sketch import SketchBatch, compute_sketch_batch, d_top_only
 
 __all__ = [
@@ -29,6 +30,11 @@ __all__ = [
     "ring_of_cliques",
     "select_landmarks",
     "to_networkx",
+    "FrontierEngine",
+    "HubSplit",
+    "make_relay",
+    "segment_or",
+    "make_search_context",
     "LabellingScheme",
     "build_labelling",
     "labelling_size_bytes",

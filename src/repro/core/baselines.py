@@ -24,46 +24,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .frontier import bfs_depths, make_relay
 from .graph import INF, Graph
 from .qbs import SPGResult, _reverse_edge_map
-from .search import Query, SearchContext, guided_search
+from .search import Query, guided_search, make_search_context
 
 # ---------------------------------------------------------------------------
 # Oracle
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("n_vertices", "max_levels"))
-def _full_bfs(src, dst, root, n_vertices: int, max_levels: int):
-    depth0 = jnp.full((n_vertices,), INF, jnp.int32).at[root].set(0)
-
-    def cond(c):
-        _, level, alive = c
-        return alive & (level < max_levels)
-
-    def body(c):
-        depth, level, _ = c
-        frontier = depth == level
-        msg = jax.ops.segment_max(
-            frontier[src].astype(jnp.int32), dst, num_segments=n_vertices
-        ) > 0
-        new = msg & (depth == INF)
-        return jnp.where(new, level + 1, depth), level + 1, new.any()
-
-    depth, _, _ = jax.lax.while_loop(cond, body, (depth0, jnp.int32(0), jnp.bool_(True)))
-    return depth
-
-
-def bfs_distances(graph: Graph, root: int, max_levels: int = 256) -> np.ndarray:
+def bfs_distances(graph: Graph, root: int, max_levels: int = 256,
+                  backend: str = "segment") -> np.ndarray:
     return np.asarray(
-        _full_bfs(graph.src, graph.dst, jnp.int32(root), graph.n_vertices, max_levels)
+        bfs_depths(make_relay(graph, backend=backend), jnp.int32(root), max_levels)
     )
 
 
-def bfs_spg(graph: Graph, u: int, v: int, max_levels: int = 256) -> SPGResult:
+def bfs_spg(graph: Graph, u: int, v: int, max_levels: int = 256,
+            backend: str = "segment") -> SPGResult:
     """Exact oracle via two full BFSs (O(E) each, no pruning)."""
-    du = _full_bfs(graph.src, graph.dst, jnp.int32(u), graph.n_vertices, max_levels)
-    dv = _full_bfs(graph.src, graph.dst, jnp.int32(v), graph.n_vertices, max_levels)
+    engine = make_relay(graph, backend=backend)
+    du = bfs_depths(engine, jnp.int32(u), max_levels)
+    dv = bfs_depths(engine, jnp.int32(v), max_levels)
     d = int(du[v])
     if u == v:
         return SPGResult(u=u, v=v, dist=0, edge_ids=np.zeros((0,), np.int64), d_top=INF)
@@ -78,24 +61,12 @@ def bfs_spg(graph: Graph, u: int, v: int, max_levels: int = 256) -> SPGResult:
 # ---------------------------------------------------------------------------
 
 
-def _empty_ctx(graph: Graph) -> SearchContext:
-    v = graph.n_vertices
-    e = graph.n_edges
-    return SearchContext(
-        src=graph.src,
-        dst=graph.dst,
-        gminus_e=jnp.ones((e,), bool),
-        is_landmark=jnp.zeros((v,), bool),
-        lid=jnp.full((v,), -1, jnp.int32),
-        label_dist=jnp.full((v, 1), INF, jnp.int32),
-        meta_w=jnp.full((1, 1), INF, jnp.int32),
-    )
-
-
-def bibfs_spg_batch(graph: Graph, us, vs, max_levels: int = 512) -> list[SPGResult]:
+def bibfs_spg_batch(graph: Graph, us, vs, max_levels: int = 512,
+                    backend: str = "segment") -> list[SPGResult]:
     us = np.asarray(us, np.int32).reshape(-1)
     vs = np.asarray(vs, np.int32).reshape(-1)
-    ctx = _empty_ctx(graph)
+    # empty landmark set -> G- == G, the Bi-BFS degeneration
+    ctx = make_search_context(graph, None, backend=backend)
     b = us.shape[0]
     inf = jnp.int32(INF)
     zero = jnp.int32(0)
@@ -120,8 +91,10 @@ def bibfs_spg_batch(graph: Graph, us, vs, max_levels: int = 512) -> list[SPGResu
     ]
 
 
-def bibfs_spg(graph: Graph, u: int, v: int, max_levels: int = 512) -> SPGResult:
-    return bibfs_spg_batch(graph, [u], [v], max_levels=max_levels)[0]
+def bibfs_spg(graph: Graph, u: int, v: int, max_levels: int = 512,
+              backend: str = "segment") -> SPGResult:
+    return bibfs_spg_batch(graph, [u], [v], max_levels=max_levels,
+                           backend=backend)[0]
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from .frontier import segment_or
 from .graph import INF, Graph
 from .labelling import LabellingScheme, meta_apsp
 from .search import Query, SearchContext, guided_search
@@ -199,12 +200,10 @@ def make_labelling_step(
             pl_loc = fr_loc & reach[:, :vloc] & prop_ok
             fr_src, pl_src = exchange_and_read(fr_loc, pl_loc)
 
-            msg_v = jax.ops.segment_max(
-                fr_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
-            ).T > 0
-            msg_l = jax.ops.segment_max(
-                pl_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
-            ).T > 0
+            # local edge relay = the shared frontier primitive (int8
+            # accumulator: smaller on-device temporaries, same booleans)
+            msg_v = segment_or(fr_src, dst_l, vloc + 1, acc_dtype=jnp.int8)
+            msg_l = segment_or(pl_src, dst_l, vloc + 1, acc_dtype=jnp.int8)
             new = msg_v & (depth == INF)
             depth2 = jnp.where(new, level + 1, depth)
             reach2 = reach | (new & msg_l)
@@ -346,12 +345,8 @@ def make_labelling_step_pull(
             fr_loc = depth[:, :vloc] == level
             pl_loc = fr_loc & reach[:, :vloc] & prop_ok
             fr_src, pl_src = exchange_and_read(fr_loc, pl_loc)
-            msg_v = jax.ops.segment_max(
-                fr_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
-            ).T > 0
-            msg_l = jax.ops.segment_max(
-                pl_src.astype(jnp.int8).T, dst_l, num_segments=vloc + 1
-            ).T > 0
+            msg_v = segment_or(fr_src, dst_l, vloc + 1, acc_dtype=jnp.int8)
+            msg_l = segment_or(pl_src, dst_l, vloc + 1, acc_dtype=jnp.int8)
             new = msg_v & (depth == INF)
             depth2 = jnp.where(new, level + 1, depth)
             reach2 = reach | (new & msg_l)
@@ -490,7 +485,9 @@ def make_serve_step(
 
     batch_spec = P(axis_names)
     rep = P()
-    ctx_specs = SearchContext(*(rep for _ in ctx))
+    # per-leaf replication spec (ctx.engine is a nested pytree, so the spec
+    # tree is built by tree_map rather than positional construction)
+    ctx_specs = jax.tree_util.tree_map(lambda _: rep, ctx)
     step_sharded = shard_map(
         step,
         mesh=mesh,

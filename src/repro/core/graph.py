@@ -40,6 +40,16 @@ class Graph(NamedTuple):
     def degrees(self) -> jax.Array:
         return self.indptr[1:] - self.indptr[:-1]
 
+    def hub_split(self, n_hubs: int | None = None):
+        """Degree split for the hybrid frontier backend: the top-``n_hubs``
+        vertices by (self-loop-free) degree form a dense hub block, the rest
+        stay on the sparse edge-list relay.  Returns a host-side
+        ``frontier.HubSplit``; see ``core.frontier`` for the engine that
+        consumes it."""
+        from .frontier import hub_split
+
+        return hub_split(self, n_hubs)
+
 
 def from_edges(
     edges: np.ndarray,

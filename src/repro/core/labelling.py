@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .frontier import FrontierEngine, make_relay
 from .graph import INF, Graph
 
 
@@ -48,25 +49,15 @@ class LabellingScheme(NamedTuple):
         return self.label_dist < INF
 
 
-def _edge_or(values_at_src: jax.Array, dst: jax.Array, n_vertices: int) -> jax.Array:
-    """OR-reduce per-edge boolean messages (R, E) into their dst: (R, V)."""
-    acc = jax.ops.segment_max(
-        values_at_src.astype(jnp.int32).T, dst, num_segments=n_vertices
-    )
-    return (acc > 0).T
-
-
-@partial(jax.jit, static_argnames=("n_vertices", "max_levels"))
+@partial(jax.jit, static_argnames=("max_levels",))
 def _build_labelling_arrays(
-    src: jax.Array,
-    dst: jax.Array,
+    engine: FrontierEngine,
     landmarks: jax.Array,
     is_landmark: jax.Array,
-    n_vertices: int,
     max_levels: int,
 ):
     R = landmarks.shape[0]
-    V = n_vertices
+    V = engine.n_vertices
 
     depth0 = jnp.full((R, V), INF, jnp.int32).at[jnp.arange(R), landmarks].set(0)
     reach0 = jnp.zeros((R, V), bool).at[jnp.arange(R), landmarks].set(True)
@@ -82,8 +73,8 @@ def _build_labelling_arrays(
         depth, reach_l, level, _ = carry
         frontier = depth == level
         prop_l = frontier & reach_l & propagate_ok
-        msg_vis = _edge_or(frontier[:, src], dst, V)
-        msg_l = _edge_or(prop_l[:, src], dst, V)
+        msg_vis = engine.relay(frontier)
+        msg_l = engine.relay(prop_l)
         new = msg_vis & (depth == INF)
         depth = jnp.where(new, level + 1, depth)
         reach_l = reach_l | (new & msg_l)
@@ -126,15 +117,19 @@ def meta_apsp(meta_w: jax.Array) -> jax.Array:
 
 
 def build_labelling(
-    graph: Graph, landmarks: np.ndarray, *, max_levels: int = 256
+    graph: Graph, landmarks: np.ndarray, *, max_levels: int = 256,
+    backend: str = "segment", engine: FrontierEngine | None = None,
+    **engine_kw,
 ) -> LabellingScheme:
     landmarks = jnp.asarray(landmarks, jnp.int32)
     R = int(landmarks.shape[0])
     V = graph.n_vertices
     is_landmark = jnp.zeros((V,), bool).at[landmarks].set(True)
     lid = jnp.full((V,), -1, jnp.int32).at[landmarks].set(jnp.arange(R, dtype=jnp.int32))
+    if engine is None:
+        engine = make_relay(graph, backend=backend, **engine_kw)
     label_dist, meta_w, meta_dist = _build_labelling_arrays(
-        graph.src, graph.dst, landmarks, is_landmark, V, max_levels
+        engine, landmarks, is_landmark, max_levels
     )
     return LabellingScheme(
         landmarks=landmarks,

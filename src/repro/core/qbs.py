@@ -20,10 +20,21 @@ itself.  ``query_batch_legacy`` preserves the original per-chunk host
 post-processing loop as the comparison baseline for benchmarks and
 bit-identity tests.
 
-Queries whose endpoint *is* a landmark are routed to the exact
-bidirectional-BFS path (the paper leaves this corner case implicit: a
-landmark endpoint has no label entries and no presence in G-).  They are a
-|R|/|V| fraction of random queries.
+Queries whose endpoint *is* a landmark are answered from the labels (the
+paper leaves this corner case implicit: a landmark endpoint has no label
+entries and no presence in G-).  The distance is exact from label rows +
+meta-graph APSP alone — any shortest u->r path splits at its first interior
+landmark r' into a labelled u->r' prefix and a meta-graph r'->r suffix, so
+d(u, r) = min_i L(u, i) + d_M(i, r).  Landmark-landmark SPGs certify every
+edge directly from the two label fields; one-sided queries run a single
+*distance-bounded* full-graph BFS from the non-landmark endpoint (half the
+relay work of the old Bi-BFS fallback) and certify against the label field
+on the landmark side.  They are a |R|/|V| fraction of random queries.
+
+All frontier relays (guided search and the landmark path's bounded BFS) go
+through the pluggable ``core.frontier`` engine; ``backend=`` selects the
+relay implementation at construction like ``use_pallas`` selects the
+sketch kernel.
 """
 from __future__ import annotations
 
@@ -34,9 +45,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .frontier import bfs_depths, make_relay
 from .graph import INF, Graph, select_landmarks
 from .labelling import LabellingScheme, build_labelling
-from .search import Query, SearchContext, SearchResult, guided_search
+from .search import (
+    Query,
+    SearchResult,
+    guided_search,
+    make_search_context,
+)
 from .sketch import compute_sketch_batch
 
 
@@ -83,35 +100,56 @@ def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     return order[pos].astype(np.int32)
 
 
+# -- landmark-endpoint serving helpers (module-level: one jit cache entry) ---
+
+
+@jax.jit
+def _dists_to_landmark(label_dist, meta_dist, lid, is_landmark, r_idx):
+    """(V,) exact d_G(x, landmark r_idx) from label rows + meta APSP."""
+    col = meta_dist[:, r_idx]                               # (R,)
+    base = jnp.min(label_dist + col[None, :], axis=1)       # non-landmark rows
+    at_lm = meta_dist[jnp.clip(lid, 0, None), r_idx]
+    return jnp.minimum(jnp.where(is_landmark, at_lm, base), INF).astype(jnp.int32)
+
+
+@jax.jit
+def _certify_spg_edges(src, dst, rev_edge, du_all, dv_all, d):
+    """Edge (x, y) lies on a shortest u-v path iff du(x) + 1 + dv(y) == d;
+    symmetrized to both orientations like every SPG edge mask."""
+    mask = (du_all[src] + 1 + dv_all[dst]) == d
+    return mask | mask[rev_edge]
+
+
 class QbSIndex:
     def __init__(self, graph: Graph, scheme: LabellingScheme, *,
                  max_levels: int = 512, max_chain: int = 512, chunk: int = 32,
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, backend: str = "segment",
+                 engine_opts: dict | None = None):
         self.graph = graph
         self.scheme = scheme
         self.max_levels = max_levels
         self.max_chain = max_chain
         self.chunk = chunk
-        # Read-only record of the construction choice: the jitted pipeline
-        # captures it below, so mutating this attribute has no effect —
-        # rebuild the index to switch sketch paths.
+        # Read-only records of the construction choices: the jitted pipeline
+        # captures them below, so mutating these attributes has no effect —
+        # rebuild the index to switch sketch paths or relay backends.
         self.use_pallas = use_pallas
+        self.backend = backend
 
+        engine_opts = engine_opts or {}
+        self.ctx = make_search_context(graph, scheme, backend=backend,
+                                       **engine_opts)
+        # Unmasked full-graph relay for the landmark-endpoint path (those
+        # shortest paths may pass *through* landmarks, so G- is wrong there).
+        self._full_engine = make_relay(graph, backend=backend, **engine_opts)
         is_l = scheme.is_landmark
-        self.ctx = SearchContext(
-            src=graph.src,
-            dst=graph.dst,
-            gminus_e=(~is_l[graph.src]) & (~is_l[graph.dst]),
-            is_landmark=is_l,
-            lid=scheme.lid,
-            label_dist=scheme.label_dist,
-            meta_w=scheme.meta_w,
-        )
         self._rev_edge = _reverse_edge_map(
             np.asarray(graph.src), np.asarray(graph.dst), graph.n_vertices
         )
         self._rev_edge_j = jnp.asarray(self._rev_edge)
         self._is_landmark_np = np.asarray(is_l)
+        self._lid_np = np.asarray(scheme.lid)
+        self._meta_dist_np = np.asarray(scheme.meta_dist)
 
         v = graph.n_vertices
         searcher = partial(
@@ -147,7 +185,7 @@ class QbSIndex:
         device arrays ``(dist (B,), edge_mask (B, E) bool)`` with no host
         sync.  Public contract re-exported by
         ``repro.serving.make_spg_serve_step``; landmark-endpoint lanes are
-        garbage here — ``query_batch`` routes them to Bi-BFS."""
+        garbage here — ``query_batch`` answers them from the labels."""
         d, m = self._search_batch(
             self.ctx, self.scheme.label_dist, self.scheme.meta_w,
             self.scheme.meta_dist, us, vs,
@@ -161,7 +199,9 @@ class QbSIndex:
               landmarks: np.ndarray | None = None, **kw) -> "QbSIndex":
         if landmarks is None:
             landmarks = select_landmarks(graph, n_landmarks)
-        scheme = build_labelling(graph, landmarks)
+        scheme = build_labelling(
+            graph, landmarks, backend=kw.get("backend", "segment"),
+            **(kw.get("engine_opts") or {}))
         return cls(graph, scheme, **kw)
 
     # -- queries -------------------------------------------------------------
@@ -185,19 +225,59 @@ class QbSIndex:
             live = min(self.chunk, normal.size - start)
             yield sel[:live], d[:live], m[:live]
 
+    def _landmark_one(self, u: int, v: int) -> SPGResult:
+        """One landmark-endpoint query answered from the labels.
+
+        Distance is read off label rows + meta_dist (exact, see module
+        docstring).  Edges: landmark-landmark queries certify from the two
+        label distance fields with no search at all; one-sided queries run a
+        single bounded full-graph BFS from the non-landmark endpoint.
+        """
+        no_edges = np.zeros((0,), np.int64)
+        if u == v:
+            return SPGResult(u=u, v=v, dist=0, edge_ids=no_edges, d_top=INF)
+        s = self.scheme
+        lu, lv = int(self._lid_np[u]), int(self._lid_np[v])
+        if lu >= 0 and lv >= 0:
+            d = int(min(self._meta_dist_np[lu, lv], INF))
+            if d >= INF:
+                return SPGResult(u=u, v=v, dist=INF, edge_ids=no_edges,
+                                 d_top=INF)
+            du_all = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
+                                        s.is_landmark, lu)
+            dv_all = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
+                                        s.is_landmark, lv)
+        else:
+            # exactly one landmark endpoint r; a is the normal endpoint
+            a, r_idx = (v, lu) if lu >= 0 else (u, lv)
+            to_lm = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
+                                       s.is_landmark, r_idx)
+            d = int(to_lm[a])
+            if d >= INF:
+                return SPGResult(u=u, v=v, dist=INF, edge_ids=no_edges,
+                                 d_top=INF)
+            depth_a = bfs_depths(self._full_engine, jnp.int32(a),
+                                 self.max_levels, bound=jnp.int32(d - 1))
+            # du_all = d(., u), dv_all = d(., v); undirected, so the
+            # label field serves either side
+            du_all, dv_all = (to_lm, depth_a) if lu >= 0 else (depth_a, to_lm)
+        mask = _certify_spg_edges(self.graph.src, self.graph.dst,
+                                  self._rev_edge_j, du_all, dv_all,
+                                  jnp.int32(d))
+        return SPGResult(u=u, v=v, dist=d,
+                         edge_ids=np.flatnonzero(np.asarray(mask)), d_top=INF)
+
     def _landmark_fallback(self, us: np.ndarray, vs: np.ndarray,
                            lm_idx: np.ndarray) -> list[SPGResult]:
-        """Exact Bi-BFS answers for landmark-endpoint queries (single place
-        to change the fallback policy for both batch entry points)."""
-        from .baselines import bibfs_spg_batch
-        return bibfs_spg_batch(self.graph, us[lm_idx], vs[lm_idx],
-                               max_levels=self.max_levels)
+        """Label-answered landmark-endpoint queries (single place to change
+        the policy for both batch entry points)."""
+        return [self._landmark_one(int(us[i]), int(vs[i])) for i in lm_idx]
 
     def query_batch_arrays(self, us, vs) -> tuple[np.ndarray, np.ndarray]:
         """Serving fast path: answer a query batch as raw arrays
         (dist (N,) int32, edge_mask (N, E) bool, symmetrized) with no
         per-query host objects.  Landmark-endpoint queries are routed to the
-        exact Bi-BFS fallback, like ``query_batch``."""
+        label-answered landmark path, like ``query_batch``."""
         us = np.asarray(us, np.int32).reshape(-1)
         vs = np.asarray(vs, np.int32).reshape(-1)
         landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
+from .frontier import segment_or
 from .graph import INF, Graph
 from .labelling import LabellingScheme
 from .distributed import EdgePartition, _pack_bits, partition_edges
@@ -126,12 +127,12 @@ def make_scale_serve_step(
             return ((words >> src_bit[None, :]) & jnp.uint32(1)) > 0
 
         def relay(bits_be, extra_e_mask=None):
-            """(B, E) bool -> (B, vloc+1) bool via dst segment-OR."""
+            """(B, E) bool -> (B, vloc+1) bool via the shared frontier
+            primitive (dst-keyed segment-OR over the local edge shard)."""
             m = bits_be
             if extra_e_mask is not None:
                 m = m & extra_e_mask[None, :]
-            return jax.ops.segment_max(
-                m.astype(jnp.int8).T, dst_l, num_segments=vloc + 1).T > 0
+            return segment_or(m, dst_l, vloc + 1, acc_dtype=jnp.int8)
 
         def psum_i(x):
             return jax.lax.psum(x, axis_names)

@@ -6,7 +6,9 @@ landmarks from the labelling).
 TPU adaptation notes (see DESIGN.md §2):
 
 * Queues -> level-synchronous frontier masks; every step is an edge-parallel
-  ``segment_max`` relay, so hub vertices never serialize a lane.
+  relay through the pluggable ``core.frontier`` engine (``segment_max`` by
+  default, CSR-blocked or hybrid hub/tail via ``backend=``), so hub
+  vertices never serialize a lane.
 * The paper's recover search walks pointers from anchor set Z.  Here the
   labels act as *global* distance certificates, which turns most of the walk
   into a single pointwise test:  a vertex x lies on a landmark-free shortest
@@ -27,7 +29,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .graph import INF
+from .frontier import FrontierEngine, make_relay
+from .graph import INF, Graph
 
 
 class SearchContext(NamedTuple):
@@ -40,6 +43,43 @@ class SearchContext(NamedTuple):
     lid: jax.Array          # (V,) int32: vertex -> landmark index, -1 otherwise
     label_dist: jax.Array   # (V, R) int32, INF = no entry
     meta_w: jax.Array       # (R, R) int32 direct meta edge weights
+    engine: FrontierEngine  # G- relay (gminus_e baked in as the edge mask)
+
+
+def make_search_context(
+    graph: Graph,
+    scheme=None,
+    *,
+    backend: str = "segment",
+    engine: FrontierEngine | None = None,
+    **engine_kw,
+) -> SearchContext:
+    """Build the per-graph search context (single construction point for the
+    replicated-label path: ``QbSIndex``, the Bi-BFS baseline, the sharded
+    serve step).  ``scheme=None`` means an empty landmark set, which is
+    exactly the Bi-BFS degeneration.  ``engine`` overrides the built one
+    (tests); otherwise the relay backend is chosen by ``backend=``."""
+    v, e = graph.n_vertices, graph.n_edges
+    if scheme is None:
+        gminus_e = jnp.ones((e,), bool)
+        is_landmark = jnp.zeros((v,), bool)
+        lid = jnp.full((v,), -1, jnp.int32)
+        label_dist = jnp.full((v, 1), INF, jnp.int32)
+        meta_w = jnp.full((1, 1), INF, jnp.int32)
+    else:
+        is_landmark = scheme.is_landmark
+        gminus_e = (~is_landmark[graph.src]) & (~is_landmark[graph.dst])
+        lid = scheme.lid
+        label_dist = scheme.label_dist
+        meta_w = scheme.meta_w
+    if engine is None:
+        engine = make_relay(graph, backend=backend, edge_mask=gminus_e,
+                            **engine_kw)
+    return SearchContext(
+        src=graph.src, dst=graph.dst, gminus_e=gminus_e,
+        is_landmark=is_landmark, lid=lid, label_dist=label_dist,
+        meta_w=meta_w, engine=engine,
+    )
 
 
 class Query(NamedTuple):
@@ -61,16 +101,6 @@ class SearchResult(NamedTuple):
     d_minus: jax.Array    # () int32 d_{G-}(u, v), INF if balls never met
     d_u: jax.Array        # () int32 explored radius, u side
     d_v: jax.Array        # () int32 explored radius, v side
-
-
-def _scatter_or(values: jax.Array, key: jax.Array, n: int) -> jax.Array:
-    """OR-reduce per-edge bools (E,) into vertices keyed by ``key``: (V,)."""
-    return jax.ops.segment_max(values.astype(jnp.int32), key, num_segments=n) > 0
-
-
-def _scatter_or2(values: jax.Array, key: jax.Array, n: int) -> jax.Array:
-    """(E, R) bool -> (V, R) bool OR-reduction keyed by ``key``."""
-    return jax.ops.segment_max(values.astype(jnp.int32), key, num_segments=n) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +132,7 @@ def bidirectional_bfs(ctx: SearchContext, q: Query, n_vertices: int, max_levels:
 
         def expand(depth, d):
             frontier = depth == d
-            msg = _scatter_or(frontier[ctx.src] & ctx.gminus_e, ctx.dst, V)
+            msg = ctx.engine.relay(frontier)
             new = msg & (depth == INF)
             return jnp.where(new, d + 1, depth), d + 1, new.any()
 
@@ -136,8 +166,15 @@ def reverse_search(ctx: SearchContext, depth_u, depth_v, d_minus, n_vertices: in
     adjacent to the meeting cut, so we chain backward from the meeting set
     W = {x : depth_u[x] + depth_v[x] == d_minus} on each side.  Certified
     edges are oriented along the u->v path direction.
+
+    The per-vertex chaining is one engine relay per level: a vertex x at
+    depth l-1 joins the on-path set iff some on-path depth-l neighbour
+    reaches it through G-.  For the u side the seed scattered the oriented
+    certificates by *source*; on the symmetrized edge list (edge set and
+    G- mask both symmetric) that equals the canonical dst-keyed relay, so
+    both sides share one relay form.  The oriented per-edge certificate
+    masks themselves stay explicit per-edge expressions (pure gathers).
     """
-    V = n_vertices
     common = (depth_u < INF) & (depth_v < INF)
     w_set = common & (depth_u + depth_v == d_minus)
 
@@ -159,7 +196,6 @@ def reverse_search(ctx: SearchContext, depth_u, depth_v, d_minus, n_vertices: in
                     & (depth[ctx.dst] == l)
                     & (depth[ctx.src] == l - 1)
                 )
-                on = on | _scatter_or(cert, ctx.src, V)
             else:
                 # certify (x -> y) with depth_v[x] == l, depth_v[y] == l-1
                 cert = (
@@ -168,7 +204,7 @@ def reverse_search(ctx: SearchContext, depth_u, depth_v, d_minus, n_vertices: in
                     & (depth[ctx.src] == l)
                     & (depth[ctx.dst] == l - 1)
                 )
-                on = on | _scatter_or(cert, ctx.dst, V)
+            on = on | ((depth == l - 1) & ctx.engine.relay(on & (depth == l)))
             return on, emask | cert, l - 1
 
         on0 = w_set
@@ -189,7 +225,6 @@ def _side_attach(ctx: SearchContext, depth, side_land, n_vertices: int, max_chai
 
     Returns (edge_mask, on) where on[x, r] certifies x on such a path.
     """
-    V = n_vertices
     ld = ctx.label_dist
     lvalid = ld < INF
     sigma = side_land  # (R,)
@@ -210,13 +245,15 @@ def _side_attach(ctx: SearchContext, depth, side_land, n_vertices: int, max_chai
 
     def body(c):
         on, _, it = c
-        relay = (
+        # label-decrement coupling ties src and dst per landmark, so this is
+        # a generic per-edge message, not a vertex-value relay
+        msgs = (
             ctx.gminus_e[:, None]
             & on[ctx.src]
             & lvalid[ctx.dst]
             & (ld[ctx.dst] == ld[ctx.src] - 1)
         )
-        grown = _scatter_or2(relay, ctx.dst, V)
+        grown = ctx.engine.scatter(msgs.T).T
         new_on = on | grown
         changed = jnp.any(new_on & ~on)
         return new_on, changed, it + 1

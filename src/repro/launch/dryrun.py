@@ -308,6 +308,7 @@ def lower_qbs_serve_cell(graph_name: str, mesh, *, batch: int | None = None,
     """Replicated-label batched serving (graphs that fit per-device); the
     vertex-sharded variant for billion-scale graphs lives in
     core.scale_serve and is lowered by lower_qbs_scale_serve_cell."""
+    from ..core.frontier import abstract_engine
     from ..core.search import SearchContext
     from ..core.distributed import make_serve_step
     from ..core.labelling import LabellingScheme
@@ -325,6 +326,7 @@ def lower_qbs_serve_cell(graph_name: str, mesh, *, batch: int | None = None,
         lid=jax.ShapeDtypeStruct((v,), i32),
         label_dist=jax.ShapeDtypeStruct((v, r), i32),
         meta_w=jax.ShapeDtypeStruct((r, r), i32),
+        engine=abstract_engine(v, e, masked=True),
     )
     scheme_label = jax.ShapeDtypeStruct((v, r), i32)
     meta = jax.ShapeDtypeStruct((r, r), i32)
@@ -349,7 +351,7 @@ def lower_qbs_serve_cell(graph_name: str, mesh, *, batch: int | None = None,
 
     rep = _ns(mesh, P())
     bsp = _ns(mesh, P(axis_names))
-    ctx_sh = SearchContext(*(rep for _ in ctx))
+    ctx_sh = jax.tree_util.tree_map(lambda _: rep, ctx)
     fn = jax.jit(step, in_shardings=(ctx_sh, rep, rep, rep, bsp, bsp),
                  out_shardings=(bsp, bsp))
     t0 = time.time()

@@ -8,6 +8,13 @@ copied into at most ``top_k`` expert capacity slots; overflow tokens are
 dropped from the expert path (standard capacity-factor routing), which at
 capacity_factor 1.25 affects a negligible tail and keeps every shape
 static.
+
+Capacity dropping is a *training* throughput trade.  At inference
+(``dropless=True``) capacity covers every routed assignment, because a
+token's expert output must not depend on how many other tokens share its
+batch: with dropping, prefill+decode could not reproduce the full-sequence
+forward (the decode token always has a fresh capacity buffer while the
+same token inside a longer forward competes for slots).
 """
 from __future__ import annotations
 
@@ -36,13 +43,19 @@ def moe_capacity(cfg, n_tokens: int) -> int:
     return max(8, (cap + 7) // 8 * 8)  # 8-aligned for TPU lanes
 
 
-def moe(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
-    if getattr(cfg, "moe_dispatch", "onehot") == "sort":
-        return moe_sort(p, x, cfg)
+def moe(p: dict, x: jax.Array, cfg, *, dropless: bool = False) -> tuple[jax.Array, jax.Array]:
+    # dropless always dispatches via sort: the one-hot dispatch tensor
+    # scales quadratically with the dropless capacity.  The static dropless
+    # bound is cap = n per expert (top_k indices are distinct, so one token
+    # contributes at most one slot per expert), giving O(e*n*d) expert
+    # buffers — e-times the capacity-routed footprint; acceptable for
+    # decode/prefill shapes, and the tightest bound static shapes allow.
+    if dropless or getattr(cfg, "moe_dispatch", "onehot") == "sort":
+        return moe_sort(p, x, cfg, dropless=dropless)
     return moe_onehot(p, x, cfg)
 
 
-def moe_onehot(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+def moe_onehot(p: dict, x: jax.Array, cfg, *, dropless: bool = False) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out, aux_loss). Dispatch via one-hot einsums.
 
     ``moe_group_size=0`` is the naive single-group GShard baseline: capacity
@@ -59,7 +72,9 @@ def moe_onehot(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     g = n // m
     if g * m != n:
         g, m = 1, n
-    cap = moe_capacity(cfg, m)
+    # dropless: top_k indices are distinct per token, so an expert receives
+    # at most one slot per token -> cap = m is the tight static bound
+    cap = m if dropless else moe_capacity(cfg, m)
     xt = x.reshape(g, m, d)
 
     logits = xt.astype(jnp.float32) @ p["router"]            # (G, m, E)
@@ -99,7 +114,7 @@ def moe_onehot(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     return out.reshape(b, s, d), aux
 
 
-def moe_sort(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+def moe_sort(p: dict, x: jax.Array, cfg, *, dropless: bool = False) -> tuple[jax.Array, jax.Array]:
     """Sort/scatter-based dispatch: O(N*k*d) data movement, no N^2 one-hot
     matmuls.  Identical routing semantics to ``moe_onehot`` (stable argsort
     preserves the per-expert token order, so the same overflow tokens drop).
@@ -107,7 +122,8 @@ def moe_sort(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     b, s, d = x.shape
     n = b * s
     e, k = cfg.moe_experts, cfg.moe_top_k
-    cap = moe_capacity(cfg, n)
+    # tight static dropless bound: distinct top_k => <= n slots per expert
+    cap = n if dropless else moe_capacity(cfg, n)
     xt = x.reshape(n, d)
 
     logits = xt.astype(jnp.float32) @ p["router"]            # (N, E)

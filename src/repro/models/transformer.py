@@ -69,10 +69,14 @@ def _init_dense_block(key, cfg: ModelConfig) -> Params:
     return p
 
 
-def _dense_block(p, x, cfg, *, causal: bool):
+def _dense_block(p, x, cfg, *, causal: bool, train: bool = False):
+    """MoE routing is capacity-dropping only when ``train=True``; every
+    serving entry point (eval forward, prefill, decode) is dropless so
+    prefill+decode reproduces the full-sequence forward (see models.moe)."""
     h = x + L.attention(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, causal=causal)
     if cfg.moe_experts:
-        out, aux = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        out, aux = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg,
+                           dropless=not train)
         return h + out, aux
     return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), jnp.float32(0)
 
@@ -82,7 +86,8 @@ def _dense_block_prefill(p, x, cfg):
     a, cache = L.attention_prefill(p["attn"], hn, cfg)
     h = x + a
     if cfg.moe_experts:
-        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg,
+                         dropless=True)
         return h + out, cache
     return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), cache
 
@@ -92,7 +97,8 @@ def _dense_block_decode(p, x, cache, cache_len, cfg):
     a, cache = L.attention_decode(p["attn"], hn, cache, cache_len, cfg)
     h = x + a
     if cfg.moe_experts:
-        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+        out, _ = MOE.moe(p["moe"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg,
+                         dropless=True)
         return h + out, cache
     return h + L.mlp(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps)), cache
 
@@ -183,8 +189,11 @@ def _unembed(p, cfg, h):
 # forward (train) per family
 # ---------------------------------------------------------------------------
 
-def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
-    """Returns (logits (B,S,V) f32, aux_loss)."""
+def forward(params: Params, cfg: ModelConfig, batch: dict,
+            *, train: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V) f32, aux_loss).  ``train`` selects the MoE
+    dispatch mode (capacity-dropping vs dropless); the default is the
+    inference semantics that prefill+decode reproduces exactly."""
     causal = not cfg.encoder_only
     if cfg.frontend == "audio_frames":
         x = batch["features"].astype(L.dtype_of(cfg.dtype)) @ params["frontend"]
@@ -211,7 +220,7 @@ def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, j
                     blk["mamba"], L.rmsnorm(h, blk["ln"], cfg.norm_eps), cfg), None
             h, _ = jax.lax.scan(_maybe_remat(inner, cfg), h, grp,
                                 unroll=cfg.scan_unroll)
-            h = _shared_apply(params["shared"], h, x0, cfg)
+            h = _shared_apply(params["shared"], h, x0, cfg, train=train)
             return h, None
 
         h, _ = jax.lax.scan(group, x, params["blocks"], unroll=cfg.scan_unroll)
@@ -219,7 +228,7 @@ def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, j
 
     def body(carry, blk):
         h, aux = carry
-        h, a = _dense_block(blk, h, cfg, causal=causal)
+        h, a = _dense_block(blk, h, cfg, causal=causal, train=train)
         return (_anchor(h, cfg), aux + a), None
 
     (h, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, jnp.float32(0)),
@@ -227,9 +236,10 @@ def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, j
     return _unembed(params, cfg, h), aux / cfg.n_layers
 
 
-def _shared_apply(sp, h, x0, cfg):
+def _shared_apply(sp, h, x0, cfg, *, train: bool = False):
     z = jnp.concatenate([h, x0], axis=-1) @ sp["in_proj"]
-    z, _ = _dense_block(sp["block"], z, cfg, causal=not cfg.encoder_only)
+    z, _ = _dense_block(sp["block"], z, cfg, causal=not cfg.encoder_only,
+                        train=train)
     return h + z @ sp["out_proj"]
 
 
@@ -250,7 +260,7 @@ def _shared_decode(sp, h, x0, cache, cache_len, cfg):
 # ---------------------------------------------------------------------------
 
 def loss_fn(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
-    logits, aux = forward(params, cfg, batch)
+    logits, aux = forward(params, cfg, batch, train=True)
     if cfg.encoder_only:
         targets = batch["targets"]
         mask = batch["loss_mask"].astype(jnp.float32)

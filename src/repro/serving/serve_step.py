@@ -8,8 +8,8 @@ built with ``use_pallas=True``, the default) -> vmapped guided search ->
 device-side edge-mask symmetrization.  The step is fixed-shape (``B =
 index.chunk`` lanes), returns device arrays with no host sync, and serves
 the non-landmark-endpoint traffic; ``serve_spg_batch`` adds host-side
-padding/routing for arbitrary batches (landmark endpoints fall back to
-exact Bi-BFS, same as ``QbSIndex.query_batch``).
+padding/routing for arbitrary batches (landmark endpoints are answered
+from the labels, same as ``QbSIndex.query_batch``).
 
 **LM serving**: prefill and single-token decode (the units the dry-run
 lowers for the decode_* / prefill_* shape cells), plus a simple batched
@@ -49,8 +49,8 @@ def make_spg_serve_step(index) -> Callable:
 
     Landmark-endpoint queries are *not* handled here (they have no label
     entries; the pipeline returns garbage lanes for them) — route them to
-    ``repro.core.baselines.bibfs_spg_batch`` as ``serve_spg_batch`` and
-    ``QbSIndex.query_batch`` do.
+    the label-answered landmark path as ``serve_spg_batch`` and
+    ``QbSIndex.query_batch`` do via ``QbSIndex._landmark_fallback``.
     """
     return index.serve_step
 
@@ -59,8 +59,8 @@ def serve_spg_batch(index, us, vs) -> tuple[np.ndarray, np.ndarray]:
     """Answer an arbitrary-size query batch through the jitted pipeline.
 
     Host-side driver around ``make_spg_serve_step``: fixed-shape padded
-    chunks of ``index.chunk`` lanes, one host sync per chunk, exact Bi-BFS
-    fallback for landmark endpoints.  Returns ``(dist (N,) int32,
+    chunks of ``index.chunk`` lanes, one host sync per chunk, label-answered
+    landmark-endpoint routing.  Returns ``(dist (N,) int32,
     edge_mask (N, E) bool)``.
     """
     return index.query_batch_arrays(us, vs)

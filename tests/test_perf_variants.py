@@ -88,10 +88,15 @@ def test_layer_remat_same_loss_and_grads():
 
     l0, g0 = loss_of(m0)(params)
     lr, gr = loss_of(mr)(params)
-    assert abs(float(l0) - float(lr)) < 1e-5
+    # jax.checkpoint moves XLA fusion boundaries, so the bf16 forward is
+    # re-rounded at different points: same math, not bitwise — compare at
+    # bf16-accumulation tolerance (observed ~1.6e-5 on a ~5.7 loss).
+    assert abs(float(l0) - float(lr)) < 1e-4, (float(l0), float(lr))
+    # grads flow through bf16 params, so recompute rounding shows up at
+    # bf16 ulp scale (2^-7 at magnitude ~1): compare at two ulps
     for a, b in zip(jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(gr)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b, np.float32), atol=1e-3)
+                                   np.asarray(b, np.float32), atol=1.6e-2)
 
 
 def test_remat_hybrid_and_ssm_paths():

@@ -1,5 +1,5 @@
 """Serving-path edge cases for ``QbSIndex.query_batch`` and the jitted
-pipeline: landmark-endpoint routing (bibfs fallback), u == v trivial
+pipeline: landmark-endpoint routing (label-answered path), u == v trivial
 queries, ragged batches that exercise the fixed-shape padding, and
 bit-identity between the new pipeline and the seed (legacy) loop."""
 import numpy as np
@@ -27,7 +27,7 @@ def _assert_matches_oracle(g, res):
 
 
 def test_landmark_endpoint_batch(setup):
-    """Every query touches a landmark endpoint -> all routed to bibfs."""
+    """Every query touches a landmark endpoint -> all answered from labels."""
     g, idx = setup
     lms = np.asarray(idx.scheme.landmarks)
     non = np.flatnonzero(~np.asarray(idx.scheme.is_landmark))
