@@ -21,6 +21,8 @@ import numpy as np
 
 from repro.core import barabasi_albert_graph, make_relay, random_regular_graph
 
+from .common import interleaved_best
+
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH.json"
 
 # relay widths: K=1 is the online bidirectional search, K=20 the batched
@@ -38,18 +40,12 @@ def _graphs(scale: float):
 
 
 def _time_interleaved(fns: dict, vals, rounds: int = 15) -> dict:
-    """min-of-N with the backends interleaved round-robin, so slow-machine
-    noise (CI runners, shared CPUs) hits every backend equally instead of
-    whichever was measured during the bad slice."""
-    for fn in fns.values():
-        jax.block_until_ready(fn(vals))  # compile
-    best = {name: float("inf") for name in fns}
-    for _ in range(rounds):
-        for name, fn in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(vals))
-            best[name] = min(best[name], time.perf_counter() - t0)
-    return best
+    """min-of-N over the shared ``common.interleaved_best`` timer, with
+    each relay synced through ``block_until_ready`` so the async dispatch
+    doesn't leak out of its cell."""
+    cells = {name: (lambda fn=fn: jax.block_until_ready(fn(vals)))
+             for name, fn in fns.items()}
+    return interleaved_best(cells, rounds=rounds)
 
 
 def run(scale: float = 1.0, n_hubs: int = 512, **_) -> list[tuple]:

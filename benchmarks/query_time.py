@@ -1,21 +1,18 @@
-"""Table 2 (right) + Figure 11: average query time, plus old-vs-new serving.
+"""Table 2 (right) + Figure 11: average query time.
 
 QbS (sketch + guided search, batched) vs Bi-BFS (the paper's search
 baseline) vs PPL / ParentPPL (recursive label queries, capped sizes).
 Times are per query, amortized over a batch — the TPU-native serving mode
 (DESIGN.md §2); Bi-BFS is batched identically so the comparison is fair.
 
-``serving_rows`` additionally reports queries/sec for the two serving
-paths over the same query stream:
-
-* old — ``QbSIndex.query_batch_legacy``: the seed per-chunk Python loop
-  (host-side (B, E) symmetrization gather + per-query ``np.flatnonzero``
-  inside the loop, pure-jnp sketch).
-* new — ``QbSIndex.query_batch``: the persistent jitted pipeline (Pallas
-  min-plus sketch, device-side symmetrization, one host sync per chunk).
+``serving_rows`` reports queries/sec for the planner/service path
+(``QbSIndex.query_batch``) over the same query stream.  The old-path
+column is gone with ``query_batch_legacy`` (seed semantics are pinned by
+``tests/helpers/serving_oracle.py`` instead); sync-vs-async and traffic-mix
+comparisons live in ``benchmarks/serving_throughput.py``.
 
 A 10k-vertex synthetic graph (at the default --scale 1.0) is always
-included so the comparison covers the scale regime the serving rework
+included so the numbers cover the scale regime the serving rework
 targets.
 """
 from __future__ import annotations
@@ -35,33 +32,26 @@ N_QUERIES = 64
 def serving_rows(g, name: str, n_queries: int = N_QUERIES,
                  seed: int = 7, idx: QbSIndex | None = None,
                  queries: tuple | None = None,
-                 new_timing: tuple | None = None) -> list[tuple]:
-    """Old vs new serving path on one graph: per-query µs + queries/sec.
+                 timing: float | None = None) -> list[tuple]:
+    """Serving-path throughput on one graph: per-query µs + queries/sec.
 
-    ``queries=(us, vs)`` supplies the query sample; ``new_timing=(dt,
-    results)`` reuses a measurement of the new path the caller already
-    took on that exact sample, so the suite loop doesn't time
-    ``query_batch`` twice.  Pass both together or neither."""
+    ``queries=(us, vs)`` supplies the query sample; ``timing`` reuses a
+    seconds-per-batch measurement the caller already took on that exact
+    sample, so the suite loop doesn't time ``query_batch`` twice.  Pass
+    both together or neither."""
     us, vs = queries if queries is not None else sample_queries(
         g, n_queries, seed=seed)
     n_queries = us.shape[0]
     if idx is None:
         idx = QbSIndex.build(g, n_landmarks=20, chunk=32)
 
-    dt_old, res_old = time_call(lambda: idx.query_batch_legacy(us, vs), repeat=2)
-    if new_timing is None:
-        dt_new, res_new = time_call(lambda: idx.query_batch(us, vs), repeat=2)
-    else:
-        dt_new, res_new = new_timing
-    assert [r.dist for r in res_old] == [r.dist for r in res_new]
+    dt = timing
+    if dt is None:
+        dt, _ = time_call(lambda: idx.query_batch(us, vs), repeat=2)
 
-    qps_old = n_queries / max(dt_old, 1e-9)
-    qps_new = n_queries / max(dt_new, 1e-9)
+    qps = n_queries / max(dt, 1e-9)
     return [
-        (f"query/qbs_old/{name}", dt_old / n_queries * 1e6,
-         f"qps={qps_old:.0f}"),
-        (f"query/qbs_new/{name}", dt_new / n_queries * 1e6,
-         f"qps={qps_new:.0f},speedup_vs_old={dt_old / max(dt_new, 1e-9):.2f}x"),
+        (f"query/qbs_serve/{name}", dt / n_queries * 1e6, f"qps={qps:.0f}"),
     ]
 
 
@@ -82,7 +72,7 @@ def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
                      f"qbs_speedup={dt_b / max(dt, 1e-9):.2f}x"))
 
         rows.extend(serving_rows(g, bg.name, idx=idx, queries=(us, vs),
-                                 new_timing=(dt, res)))
+                                 timing=dt))
 
         if g.n_vertices <= PPL_CAP:
             ppl = PPLIndex(g)

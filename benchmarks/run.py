@@ -29,6 +29,7 @@ def main() -> None:
         frontier_relay,
         label_size,
         query_time,
+        serving_throughput,
         sketch_kernel,
     )
     from .common import emit
@@ -42,6 +43,7 @@ def main() -> None:
         (query_time, {"sweep": sweep}),
         (coverage, {}),
         (frontier_relay, {}),
+        (serving_throughput, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))

@@ -1,6 +1,6 @@
 """End-to-end QbS serving on a 20k-vertex hub-heavy graph: build the
-labelling, inspect sketches, answer a query batch, and cross-check a sample
-against the exact oracle.
+labelling, inspect sketches, answer a query batch through the
+planner/service stack, and cross-check a sample against the exact oracle.
 
   PYTHONPATH=src python examples/qbs_query_demo.py
 """
@@ -41,9 +41,20 @@ rng = np.random.default_rng(1)
 us = rng.integers(0, graph.n_vertices, size=64)
 vs = rng.integers(0, graph.n_vertices, size=64)
 t0 = time.time()
-results = index.query_batch(us, vs)
+results = index.query_batch(us, vs)   # default service: async_depth=2
 dt = time.time() - t0
 print(f"64 queries in {dt:.2f}s ({dt / 64 * 1e3:.1f} ms/query)")
+
+# explicit service: planner lane stats + canonical-pair result cache
+service = index.make_service(async_depth=2, cache_size=1024)
+service.query_batch(us, vs)
+lanes = dict(zip(("trivial", "landmark_pair", "one_sided", "general"),
+                 service.lane_served))
+t0 = time.time()
+service.query_batch(us, vs)           # repeat stream: all cache hits
+dt_hot = time.time() - t0
+print(f"planner lanes {lanes}; hot re-query {dt_hot / 64 * 1e6:.0f} us/query "
+      f"(cache hits={service.cache.hits})")
 
 for k in (0, 7, 13):
     r = results[k]

@@ -1,6 +1,6 @@
 """Distributed QbS: edge-sharded labelling and batch-sharded query serving.
 
-Mapping of the paper onto a TPU mesh (DESIGN.md §2, §5):
+Mapping of the paper onto a TPU mesh (DESIGN.md §2, §6):
 
 * **Labelling** (offline): the |R| BFSs are one batched frontier program.
   Edges are sharded across devices *by destination-vertex block* (blocks cut
@@ -463,9 +463,13 @@ def make_serve_step(
     axis_names: tuple[str, ...] | None = None,
     max_levels: int = 64,
     max_chain: int = 64,
+    use_pallas: bool = False,
 ):
     """Return a jitted serve step: (us, vs) batch -> (edge_mask, dist),
-    batch-sharded across the mesh, graph/labels replicated."""
+    batch-sharded across the mesh, graph/labels replicated.  ``use_pallas``
+    selects the sketch kernel like ``QbSIndex(use_pallas=...)`` does for
+    the single-device pipeline (the serving service threads the index's
+    setting through)."""
     axis_names = axis_names or tuple(mesh.axis_names)
     searcher = partial(
         guided_search, n_vertices=n_vertices,
@@ -475,7 +479,8 @@ def make_serve_step(
     def step(ctx, label_dist, meta_w, meta_dist, us, vs):
         lu = label_dist[us]
         lv = label_dist[vs]
-        sk = compute_sketch_batch(lu, lv, meta_w, meta_dist)
+        sk = compute_sketch_batch(lu, lv, meta_w, meta_dist,
+                                  use_pallas=use_pallas)
         queries = Query(
             u=us, v=vs, d_top=sk.d_top, du_land=sk.du_land, dv_land=sk.dv_land,
             meta_edge=sk.meta_edge, d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,

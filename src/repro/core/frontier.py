@@ -242,6 +242,47 @@ def bfs_depths(engine: FrontierEngine, root: jax.Array, max_levels: int,
     return depth
 
 
+@functools.partial(jax.jit, static_argnames=("max_levels",))
+def bfs_depths_batch(engine: FrontierEngine, roots: jax.Array, max_levels: int,
+                     bounds: jax.Array | None = None) -> jax.Array:
+    """Batched level-synchronous BFS: ``(B,)`` roots -> ``(B, V)`` int32
+    depths, ``INF`` = unreached.  One engine relay per level serves every
+    row at once (the relay is row-independent for all backends), so a lane
+    of B sources costs the same number of device programs as one.
+
+    ``bounds`` (traced ``(B,)``) truncates each row independently at its own
+    depth, exactly like ``bfs_depths``'s scalar ``bound``: row k expands
+    only while ``level < bounds[k]``.  Rows are bit-identical to running
+    ``bfs_depths`` per root with the matching bound — the batched form of
+    the landmark-endpoint serving lane (see ``serving.planner``)."""
+    b = roots.shape[0]
+    depth0 = jnp.full((b, engine.n_vertices), INF, jnp.int32)
+    depth0 = depth0.at[jnp.arange(b), roots].set(0)
+
+    def active_rows(level, alive):
+        act = alive & (level < max_levels)
+        if bounds is not None:
+            act = act & (level < bounds)
+        return act
+
+    def cond(c):
+        _, level, alive = c
+        return active_rows(level, alive).any()
+
+    def body(c):
+        depth, level, alive = c
+        act = active_rows(level, alive)
+        frontier = (depth == level) & act[:, None]
+        msg = engine.relay(frontier)
+        new = msg & (depth == INF)
+        alive = jnp.where(act, new.any(axis=1), alive)
+        return jnp.where(new, level + 1, depth), level + 1, alive
+
+    depth, _, _ = jax.lax.while_loop(
+        cond, body, (depth0, jnp.int32(0), jnp.ones((b,), bool)))
+    return depth
+
+
 class HubSplit(NamedTuple):
     """Host-side degree split (see ``Graph.hub_split``)."""
 

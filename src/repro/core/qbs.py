@@ -1,5 +1,5 @@
-"""Query-by-Sketch facade: offline labelling + online (sketch, search) query
-answering, with batched jitted execution.
+"""Query-by-Sketch facade: offline labelling + online planner-routed
+serving.
 
 Usage::
 
@@ -7,31 +7,35 @@ Usage::
     res = index.query(u, v)              # one SPG
     res = index.query_batch(us, vs)      # batched serving
 
-The online path is a persistent fully-jitted pipeline: label gather ->
-sketch (Eq. 3 min-plus on the Pallas kernel when ``use_pallas=True``, the
-default; pure-jnp reference with ``use_pallas=False``) -> vmapped guided
-search -> device-side edge-mask symmetrization through the precomputed
-reverse-edge map.  Queries run in fixed-shape chunks of ``chunk`` lanes
-(one jit cache entry; ragged tails are padded with a repeated query and
-discarded), and each chunk costs exactly one host sync.
-``query_batch_arrays`` returns the raw (dist, edge_mask) arrays for
-serving; ``repro.serving.make_spg_serve_step`` exposes the jitted step
-itself.  ``query_batch_legacy`` preserves the original per-chunk host
-post-processing loop as the comparison baseline for benchmarks and
-bit-identity tests.
+Online serving is a two-layer planner/executor architecture (DESIGN.md
+§4).  ``serving.planner`` classifies a batch into lanes over canonical
+deduplicated pairs — trivial (u == v), landmark-landmark (label-only
+certify), one-sided landmark (label distance + one bounded BFS), and
+general (sketch + guided search) — and ``serving.service`` executes the
+lanes as fixed-shape jitted chunks with double-buffered async dispatch, an
+optional LRU result cache, and an optional batch-sharded multi-device
+mode.  ``query_batch`` / ``query_batch_arrays`` here are thin delegates
+over a default service; this module owns the per-lane *device steps*:
 
-Queries whose endpoint *is* a landmark are answered from the labels (the
-paper leaves this corner case implicit: a landmark endpoint has no label
-entries and no presence in G-).  The distance is exact from label rows +
-meta-graph APSP alone — any shortest u->r path splits at its first interior
-landmark r' into a labelled u->r' prefix and a meta-graph r'->r suffix, so
-d(u, r) = min_i L(u, i) + d_M(i, r).  Landmark-landmark SPGs certify every
-edge directly from the two label fields; one-sided queries run a single
-*distance-bounded* full-graph BFS from the non-landmark endpoint (half the
-relay work of the old Bi-BFS fallback) and certify against the label field
-on the landmark side.  They are a |R|/|V| fraction of random queries.
+* ``serve_step`` — the general lane: label gather -> sketch (Eq. 3
+  min-plus on the Pallas kernel when ``use_pallas=True``, the default) ->
+  vmapped guided search -> device-side edge-mask symmetrization through
+  the precomputed reverse-edge map.
+* ``landmark_pair_step`` / ``landmark_onesided_step`` — the vectorized
+  landmark lanes.  Queries whose endpoint *is* a landmark have no label
+  entries and no presence in G-, but their distance is exact from label
+  rows + meta-graph APSP alone: any shortest u->r path splits at its first
+  interior landmark r' into a labelled u->r' prefix and a meta-graph
+  r'->r suffix, so d(u, r) = min_i L(u, i) + d_M(i, r).  Landmark-landmark
+  SPGs certify every edge directly from the two label-derived distance
+  fields; one-sided queries add a single *distance-bounded* full-graph BFS
+  from the non-landmark endpoint, batched over the whole lane through
+  ``frontier.bfs_depths_batch``.  Landmarks are the highest-degree hubs,
+  so this traffic dominates under real skew — it runs as jitted
+  fixed-shape lanes exactly like the general path, never a per-query host
+  loop.
 
-All frontier relays (guided search and the landmark path's bounded BFS) go
+All frontier relays (guided search and the landmark lane's bounded BFS) go
 through the pluggable ``core.frontier`` engine; ``backend=`` selects the
 relay implementation at construction like ``use_pallas`` selects the
 sketch kernel.
@@ -45,12 +49,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .frontier import bfs_depths, make_relay
+from .frontier import bfs_depths_batch, make_relay
 from .graph import INF, Graph, select_landmarks
 from .labelling import LabellingScheme, build_labelling
 from .search import (
     Query,
-    SearchResult,
     guided_search,
     make_search_context,
 )
@@ -100,7 +103,7 @@ def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     return order[pos].astype(np.int32)
 
 
-# -- landmark-endpoint serving helpers (module-level: one jit cache entry) ---
+# -- landmark-lane device steps (module-level: one jit cache entry) ----------
 
 
 @jax.jit
@@ -115,9 +118,50 @@ def _dists_to_landmark(label_dist, meta_dist, lid, is_landmark, r_idx):
 @jax.jit
 def _certify_spg_edges(src, dst, rev_edge, du_all, dv_all, d):
     """Edge (x, y) lies on a shortest u-v path iff du(x) + 1 + dv(y) == d;
-    symmetrized to both orientations like every SPG edge mask."""
+    symmetrized to both orientations like every SPG edge mask.  The
+    symmetrized mask is invariant under swapping du/dv, so callers never
+    need to track which side holds the landmark."""
     mask = (du_all[src] + 1 + dv_all[dst]) == d
     return mask | mask[rev_edge]
+
+
+@jax.jit
+def _dists_to_landmark_batch(label_dist, meta_dist, lid, is_landmark, r_idx):
+    """Vectorized lane form: (B,) landmark indices -> (B, V) distances."""
+    fn = partial(_dists_to_landmark, label_dist, meta_dist, lid, is_landmark)
+    return jax.vmap(fn)(r_idx)
+
+
+_certify_spg_edges_batch = jax.vmap(
+    _certify_spg_edges, in_axes=(None, None, None, 0, 0, 0))
+
+
+@jax.jit
+def _landmark_pair_lanes(lm_dist, meta_dist, src, dst, rev_edge, ru, rv):
+    """Landmark-landmark lane: (B,) landmark index pairs -> (dist (B,),
+    edge_mask (B, E)).  Distance is a ``meta_dist`` lookup; every SPG edge
+    certifies from two rows of the precomputed (R, V) landmark-distance
+    table ``lm_dist`` — no search, no per-chunk recomputation."""
+    d = jnp.minimum(meta_dist[ru, rv], INF).astype(jnp.int32)
+    mask = _certify_spg_edges_batch(src, dst, rev_edge,
+                                    lm_dist[ru], lm_dist[rv], d)
+    return d, mask & (d < INF)[:, None]
+
+
+@partial(jax.jit, static_argnames=("max_levels",))
+def _landmark_onesided_lanes(engine, lm_dist, src, dst, rev_edge,
+                             roots, r_idx, *, max_levels: int):
+    """One-sided landmark lane: (B,) non-landmark roots + (B,) landmark
+    indices -> (dist (B,), edge_mask (B, E)).  One batched full-graph BFS,
+    each row bounded at its own d - 1 (those shortest paths may pass
+    *through* landmarks, so the G- engine is wrong here — ``engine`` is
+    the unmasked full-graph relay)."""
+    to_lm = lm_dist[r_idx]                              # (B, V)
+    d = to_lm[jnp.arange(roots.shape[0]), roots]
+    bounds = jnp.where(d < INF, d - 1, 0)   # disconnected rows never expand
+    depth = bfs_depths_batch(engine, roots, max_levels, bounds=bounds)
+    mask = _certify_spg_edges_batch(src, dst, rev_edge, to_lm, depth, d)
+    return d, mask & (d < INF)[:, None]
 
 
 class QbSIndex:
@@ -149,14 +193,19 @@ class QbSIndex:
         self._rev_edge_j = jnp.asarray(self._rev_edge)
         self._is_landmark_np = np.asarray(is_l)
         self._lid_np = np.asarray(scheme.lid)
-        self._meta_dist_np = np.asarray(scheme.meta_dist)
+        # (R, V) exact vertex-to-landmark distances, a pure function of the
+        # labelling — built once here so the landmark lane steps gather
+        # rows instead of re-reducing the label matrix every chunk.
+        self._lm_dist = _dists_to_landmark_batch(
+            scheme.label_dist, scheme.meta_dist, scheme.lid,
+            scheme.is_landmark, jnp.arange(scheme.n_landmarks))
+        self._service = None
 
         v = graph.n_vertices
         searcher = partial(
             guided_search, n_vertices=v,
             max_levels=max_levels, max_chain=max_chain,
         )
-        self._searcher = searcher
 
         def search_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
             lu = label_dist[us]
@@ -176,21 +225,38 @@ class QbSIndex:
         # two jit dispatches, everything on device, no host sync (see
         # _symmetrize for why the gather is not fused in here).
         self._search_batch = jax.jit(search_batch)
-        self._run_batch_legacy_fn = None
+
+    # -- per-lane device steps ----------------------------------------------
 
     def serve_step(self, us, vs):
-        """The persistent device pipeline for one fixed-shape query chunk:
-        sketch + guided search + edge-mask symmetrization.  Takes int32
-        device/host arrays ``(us, vs)`` of any fixed shape (B,) and returns
-        device arrays ``(dist (B,), edge_mask (B, E) bool)`` with no host
-        sync.  Public contract re-exported by
-        ``repro.serving.make_spg_serve_step``; landmark-endpoint lanes are
-        garbage here — ``query_batch`` answers them from the labels."""
+        """The general lane: one fixed-shape query chunk through sketch +
+        guided search + edge-mask symmetrization.  Takes int32 device/host
+        arrays ``(us, vs)`` of any fixed shape (B,) and returns device
+        arrays ``(dist (B,), edge_mask (B, E) bool)`` with no host sync.
+        Public contract re-exported by ``repro.serving.make_spg_serve_step``;
+        landmark-endpoint lanes are garbage here — the planner routes them
+        to the landmark lane steps below."""
         d, m = self._search_batch(
             self.ctx, self.scheme.label_dist, self.scheme.meta_w,
             self.scheme.meta_dist, us, vs,
         )
         return _symmetrize(d, m, self._rev_edge_j)
+
+    def landmark_pair_step(self, ru, rv):
+        """Landmark-landmark lane step: (B,) landmark-index pairs ->
+        device ``(dist (B,), edge_mask (B, E))``, label-only, no sync."""
+        return _landmark_pair_lanes(
+            self._lm_dist, self.scheme.meta_dist,
+            self.graph.src, self.graph.dst, self._rev_edge_j, ru, rv)
+
+    def landmark_onesided_step(self, roots, r_idx):
+        """One-sided landmark lane step: (B,) non-landmark roots + (B,)
+        landmark indices -> device ``(dist (B,), edge_mask (B, E))``; one
+        batched distance-bounded full-graph BFS, no sync."""
+        return _landmark_onesided_lanes(
+            self._full_engine, self._lm_dist,
+            self.graph.src, self.graph.dst, self._rev_edge_j,
+            roots, r_idx, max_levels=self.max_levels)
 
     # -- construction -------------------------------------------------------
 
@@ -204,175 +270,27 @@ class QbSIndex:
             **(kw.get("engine_opts") or {}))
         return cls(graph, scheme, **kw)
 
-    # -- queries -------------------------------------------------------------
+    # -- queries (thin delegates over the planner/service) -------------------
 
-    def _serve_chunks(self, us: np.ndarray, vs: np.ndarray,
-                      normal: np.ndarray):
-        """Run the jitted pipeline over ``normal`` query indices in
-        fixed-shape chunks of ``self.chunk`` lanes (ragged tails padded
-        with a repeated query, pad lanes dropped).  Yields per chunk the
-        host tuple (live indices, dist (L,), edge_mask (L, E)); the
-        ``device_get`` per chunk is the only host sync.  Streaming chunks
-        keeps peak host memory at O(chunk * E) regardless of batch size."""
-        if normal.size == 0:
-            return
-        pad = (-normal.size) % self.chunk
-        padded = np.concatenate([normal, np.repeat(normal[-1:], pad)])
-        for start in range(0, padded.size, self.chunk):
-            sel = padded[start:start + self.chunk]
-            d, m = self.serve_step(jnp.asarray(us[sel]), jnp.asarray(vs[sel]))
-            d, m = jax.device_get((d, m))
-            live = min(self.chunk, normal.size - start)
-            yield sel[:live], d[:live], m[:live]
+    def make_service(self, **kw):
+        """Construct a ``serving.ServingService`` over this index (async
+        depth, result cache, multi-device mesh — see its docstring)."""
+        from ..serving.service import ServingService
+        return ServingService(self, **kw)
 
-    def _landmark_one(self, u: int, v: int) -> SPGResult:
-        """One landmark-endpoint query answered from the labels.
+    def _default_service(self):
+        if self._service is None:
+            self._service = self.make_service()
+        return self._service
 
-        Distance is read off label rows + meta_dist (exact, see module
-        docstring).  Edges: landmark-landmark queries certify from the two
-        label distance fields with no search at all; one-sided queries run a
-        single bounded full-graph BFS from the non-landmark endpoint.
-        """
-        no_edges = np.zeros((0,), np.int64)
-        if u == v:
-            return SPGResult(u=u, v=v, dist=0, edge_ids=no_edges, d_top=INF)
-        s = self.scheme
-        lu, lv = int(self._lid_np[u]), int(self._lid_np[v])
-        if lu >= 0 and lv >= 0:
-            d = int(min(self._meta_dist_np[lu, lv], INF))
-            if d >= INF:
-                return SPGResult(u=u, v=v, dist=INF, edge_ids=no_edges,
-                                 d_top=INF)
-            du_all = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
-                                        s.is_landmark, lu)
-            dv_all = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
-                                        s.is_landmark, lv)
-        else:
-            # exactly one landmark endpoint r; a is the normal endpoint
-            a, r_idx = (v, lu) if lu >= 0 else (u, lv)
-            to_lm = _dists_to_landmark(s.label_dist, s.meta_dist, s.lid,
-                                       s.is_landmark, r_idx)
-            d = int(to_lm[a])
-            if d >= INF:
-                return SPGResult(u=u, v=v, dist=INF, edge_ids=no_edges,
-                                 d_top=INF)
-            depth_a = bfs_depths(self._full_engine, jnp.int32(a),
-                                 self.max_levels, bound=jnp.int32(d - 1))
-            # du_all = d(., u), dv_all = d(., v); undirected, so the
-            # label field serves either side
-            du_all, dv_all = (to_lm, depth_a) if lu >= 0 else (depth_a, to_lm)
-        mask = _certify_spg_edges(self.graph.src, self.graph.dst,
-                                  self._rev_edge_j, du_all, dv_all,
-                                  jnp.int32(d))
-        return SPGResult(u=u, v=v, dist=d,
-                         edge_ids=np.flatnonzero(np.asarray(mask)), d_top=INF)
-
-    def _landmark_fallback(self, us: np.ndarray, vs: np.ndarray,
-                           lm_idx: np.ndarray) -> list[SPGResult]:
-        """Label-answered landmark-endpoint queries (single place to change
-        the policy for both batch entry points)."""
-        return [self._landmark_one(int(us[i]), int(vs[i])) for i in lm_idx]
+    def query_batch(self, us, vs) -> list[SPGResult]:
+        return self._default_service().query_batch(us, vs)
 
     def query_batch_arrays(self, us, vs) -> tuple[np.ndarray, np.ndarray]:
         """Serving fast path: answer a query batch as raw arrays
         (dist (N,) int32, edge_mask (N, E) bool, symmetrized) with no
-        per-query host objects.  Landmark-endpoint queries are routed to the
-        label-answered landmark path, like ``query_batch``."""
-        us = np.asarray(us, np.int32).reshape(-1)
-        vs = np.asarray(vs, np.int32).reshape(-1)
-        landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
-        dist = np.full((us.shape[0],), INF, np.int32)
-        mask = np.zeros((us.shape[0], self.graph.n_edges), bool)
-        for idx, d, m in self._serve_chunks(us, vs, np.flatnonzero(~landmark_q)):
-            dist[idx] = d
-            mask[idx] = m
-        if landmark_q.any():
-            lm_idx = np.flatnonzero(landmark_q)
-            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
-                dist[qi] = r.dist
-                mask[qi, r.edge_ids] = True
-        return dist, mask
-
-    def query_batch(self, us, vs) -> list[SPGResult]:
-        us = np.asarray(us, np.int32).reshape(-1)
-        vs = np.asarray(vs, np.int32).reshape(-1)
-        n = us.shape[0]
-        landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
-        normal = np.flatnonzero(~landmark_q)
-
-        out: list[SPGResult | None] = [None] * n
-        for idx, d, m in self._serve_chunks(us, vs, normal):
-            for k, qi in enumerate(idx):
-                out[qi] = SPGResult(
-                    u=int(us[qi]), v=int(vs[qi]), dist=int(d[k]),
-                    edge_ids=np.flatnonzero(m[k]),
-                    d_top=int(d[k]) if d[k] < INF else INF,
-                )
-        if landmark_q.any():
-            lm_idx = np.flatnonzero(landmark_q)
-            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
-                out[qi] = r
-        return out  # type: ignore[return-value]
+        per-query host objects."""
+        return self._default_service().query_arrays(us, vs)
 
     def query(self, u: int, v: int) -> SPGResult:
         return self.query_batch([u], [v])[0]
-
-    # -- legacy path (pre-pipeline reference; benchmarks + bit-identity) -----
-
-    def _legacy_run_batch(self):
-        if self._run_batch_legacy_fn is None:
-            searcher = self._searcher
-
-            def run_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
-                lu = label_dist[us]
-                lv = label_dist[vs]
-                sk = compute_sketch_batch(lu, lv, meta_w, meta_dist)
-                queries = Query(
-                    u=us, v=vs, d_top=sk.d_top,
-                    du_land=sk.du_land, dv_land=sk.dv_land,
-                    meta_edge=sk.meta_edge,
-                    d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
-                )
-                return jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
-
-            self._run_batch_legacy_fn = jax.jit(run_batch)
-        return self._run_batch_legacy_fn
-
-    def query_batch_legacy(self, us, vs) -> list[SPGResult]:
-        """The seed serving loop, kept verbatim: per-chunk host gather for
-        symmetrization and per-query ``np.flatnonzero`` inside the loop.
-        Exists as the old-path baseline for ``benchmarks.query_time`` and as
-        the bit-identity oracle for ``query_batch``."""
-        us = np.asarray(us, np.int32).reshape(-1)
-        vs = np.asarray(vs, np.int32).reshape(-1)
-        n = us.shape[0]
-        landmark_q = self._is_landmark_np[us] | self._is_landmark_np[vs]
-        out: list[SPGResult | None] = [None] * n
-
-        run = self._legacy_run_batch()
-        normal = np.flatnonzero(~landmark_q)
-        for start in range(0, normal.size, self.chunk):
-            idx = normal[start:start + self.chunk]
-            pad = self.chunk - idx.size
-            cu = np.concatenate([us[idx], np.repeat(us[idx[-1:]], pad)])
-            cv = np.concatenate([vs[idx], np.repeat(vs[idx[-1:]], pad)])
-            res: SearchResult = run(
-                self.ctx, self.scheme.label_dist, self.scheme.meta_w,
-                self.scheme.meta_dist, jnp.asarray(cu), jnp.asarray(cv),
-            )
-            mask = np.asarray(res.edge_mask)
-            mask = mask | mask[:, self._rev_edge]
-            dists = np.asarray(res.dist)
-            # d_top is recomputable; store dist-derived value for reporting
-            for k, qi in enumerate(idx):
-                out[qi] = SPGResult(
-                    u=int(us[qi]), v=int(vs[qi]), dist=int(dists[k]),
-                    edge_ids=np.flatnonzero(mask[k]),
-                    d_top=int(dists[k]) if dists[k] < INF else INF,
-                )
-
-        if landmark_q.any():
-            lm_idx = np.flatnonzero(landmark_q)
-            for qi, r in zip(lm_idx, self._landmark_fallback(us, vs, lm_idx)):
-                out[qi] = r
-        return out  # type: ignore[return-value]

@@ -1,3 +1,12 @@
+from .planner import (
+    LANE_GENERAL,
+    LANE_LANDMARK_PAIR,
+    LANE_NAMES,
+    LANE_ONE_SIDED,
+    LANE_TRIVIAL,
+    QueryPlan,
+    plan_queries,
+)
 from .serve_step import (
     greedy_generate,
     make_decode_step,
@@ -5,11 +14,21 @@ from .serve_step import (
     make_spg_serve_step,
     serve_spg_batch,
 )
+from .service import ResultCache, ServingService
 
 __all__ = [
+    "LANE_GENERAL",
+    "LANE_LANDMARK_PAIR",
+    "LANE_NAMES",
+    "LANE_ONE_SIDED",
+    "LANE_TRIVIAL",
+    "QueryPlan",
+    "ResultCache",
+    "ServingService",
     "greedy_generate",
     "make_decode_step",
     "make_prefill_step",
     "make_spg_serve_step",
     "serve_spg_batch",
+    "plan_queries",
 ]

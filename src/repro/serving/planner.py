@@ -1,0 +1,121 @@
+"""Query planner: lane classification and batch canonicalization for SPG
+serving (DESIGN.md §4).
+
+Every serving entry point answers an arbitrary ``(us, vs)`` batch through
+the same two steps: *plan* (this module, host-side numpy) and *execute*
+(``serving.service``).  The planner owns all routing policy:
+
+* **Canonicalize + dedup.**  SPGs on an undirected graph are orientation-
+  and repetition-invariant, so queries are keyed on ``(min(u, v),
+  max(u, v))`` and deduplicated; the executor answers each *unique* pair
+  once and the plan's ``inv`` map fans results back out.  Real traffic is
+  heavily skewed toward hub pairs (the Pruned-Landmark-Labeling /
+  Hub-Accelerator observation), so dedup is a first-order win, and the
+  canonical key is exactly the result-cache key.
+* **Lanes.**  Each unique pair lands in one of four lanes, in decreasing
+  strictness:
+
+  - ``LANE_TRIVIAL``        ``u == v``: dist 0, no edges, no device work.
+  - ``LANE_LANDMARK_PAIR``  both endpoints are landmarks: distance is a
+    ``meta_dist`` lookup and every SPG edge certifies label-only
+    (``QbSIndex.landmark_pair_step``); no search at all.
+  - ``LANE_ONE_SIDED``      exactly one landmark endpoint: label-derived
+    distance + one *distance-bounded* full-graph BFS from the non-landmark
+    side, batched over the whole lane
+    (``QbSIndex.landmark_onesided_step``).
+  - ``LANE_GENERAL``        no landmark endpoint: the sketch + guided
+    search pipeline (``QbSIndex.serve_step``).
+
+Each device lane runs in fixed-shape chunks (``chunk_padded``; ragged
+tails repeat the last live entry and the pad lanes are discarded), so
+every lane has one jit cache entry per chunk width, like the seed general
+path.  The planner never touches a device: it is pure host-side
+classification, cheap relative to any lane's execution.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+LANE_TRIVIAL = 0
+LANE_LANDMARK_PAIR = 1
+LANE_ONE_SIDED = 2
+LANE_GENERAL = 3
+N_LANES = 4
+
+LANE_NAMES = ("trivial", "landmark_pair", "one_sided", "general")
+
+
+class QueryPlan(NamedTuple):
+    """Routed batch: unique canonical pairs + per-lane index sets.
+
+    ``cu``/``cv`` are the canonical (min, max) endpoints of the unique
+    pairs; ``inv`` maps each of the ``n`` original queries to its unique
+    row; ``lane`` assigns each unique row a lane id; ``lanes[k]`` lists the
+    unique-row indices of lane ``k`` in first-appearance order.
+    """
+
+    n: int                       # original batch size
+    cu: np.ndarray               # (U,) int32 canonical min endpoint
+    cv: np.ndarray               # (U,) int32 canonical max endpoint
+    inv: np.ndarray              # (n,) intp query -> unique row
+    lane: np.ndarray             # (U,) int8
+    lanes: tuple[np.ndarray, ...]  # per-lane unique-row indices
+
+    @property
+    def n_unique(self) -> int:
+        return int(self.cu.shape[0])
+
+
+def plan_queries(us: np.ndarray, vs: np.ndarray,
+                 is_landmark: np.ndarray) -> QueryPlan:
+    """Classify a query batch into lanes over canonical unique pairs."""
+    us = np.asarray(us, np.int32).reshape(-1)
+    vs = np.asarray(vs, np.int32).reshape(-1)
+    n = us.shape[0]
+    cu = np.minimum(us, vs)
+    cv = np.maximum(us, vs)
+    # stable dedup: unique rows keep first-appearance order so execution
+    # order (and thus device dispatch order) is reproducible
+    key = cu.astype(np.int64) * (int(is_landmark.shape[0]) + 1) + cv
+    _, first, inv = np.unique(key, return_index=True, return_inverse=True)
+    order = np.argsort(first, kind="stable")
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.size)
+    first = first[order]
+    inv = rank[inv]
+    cu, cv = cu[first], cv[first]
+
+    lm_u = is_landmark[cu]
+    lm_v = is_landmark[cv]
+    lane = np.where(
+        cu == cv, LANE_TRIVIAL,
+        np.where(lm_u & lm_v, LANE_LANDMARK_PAIR,
+                 np.where(lm_u ^ lm_v, LANE_ONE_SIDED, LANE_GENERAL)),
+    ).astype(np.int8)
+    lanes = tuple(np.flatnonzero(lane == k) for k in range(N_LANES))
+    return QueryPlan(n=n, cu=cu, cv=cv, inv=inv.astype(np.intp), lane=lane,
+                     lanes=lanes)
+
+
+def chunk_padded(idx: np.ndarray, chunk: int) -> Iterator[tuple[np.ndarray, int]]:
+    """Yield fixed-shape ``(sel (chunk,), live)`` index chunks of ``idx``;
+    the ragged tail repeats the last live entry (pad lanes are computed
+    and discarded — the fixed shape is what keeps one jit cache entry per
+    lane)."""
+    for start in range(0, idx.size, chunk):
+        sel = idx[start:start + chunk]
+        live = sel.size
+        if live < chunk:
+            sel = np.concatenate([sel, np.repeat(sel[-1:], chunk - live)])
+        yield sel, live
+
+
+def onesided_roots(cu: np.ndarray, cv: np.ndarray, is_landmark: np.ndarray,
+                   lid: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split one-sided-lane pairs into (non-landmark root, landmark index)."""
+    u_is = is_landmark[cu]
+    roots = np.where(u_is, cv, cu).astype(np.int32)
+    r_idx = lid[np.where(u_is, cu, cv)].astype(np.int32)
+    return roots, r_idx

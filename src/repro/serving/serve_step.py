@@ -7,9 +7,10 @@ label gather -> sketch (min-plus on the Pallas kernel when the index was
 built with ``use_pallas=True``, the default) -> vmapped guided search ->
 device-side edge-mask symmetrization.  The step is fixed-shape (``B =
 index.chunk`` lanes), returns device arrays with no host sync, and serves
-the non-landmark-endpoint traffic; ``serve_spg_batch`` adds host-side
-padding/routing for arbitrary batches (landmark endpoints are answered
-from the labels, same as ``QbSIndex.query_batch``).
+the general (non-landmark-endpoint) lane; ``serve_spg_batch`` answers
+arbitrary batches through the planner/service stack (``serving.planner``
+routes lanes, ``serving.service`` executes them with double-buffered
+async dispatch — same as ``QbSIndex.query_batch``).
 
 **LM serving**: prefill and single-token decode (the units the dry-run
 lowers for the decode_* / prefill_* shape cells), plus a simple batched
@@ -49,19 +50,16 @@ def make_spg_serve_step(index) -> Callable:
 
     Landmark-endpoint queries are *not* handled here (they have no label
     entries; the pipeline returns garbage lanes for them) — route them to
-    the label-answered landmark path as ``serve_spg_batch`` and
-    ``QbSIndex.query_batch`` do via ``QbSIndex._landmark_fallback``.
+    the vectorized landmark lane steps (``QbSIndex.landmark_pair_step`` /
+    ``landmark_onesided_step``) as the planner does.
     """
     return index.serve_step
 
 
 def serve_spg_batch(index, us, vs) -> tuple[np.ndarray, np.ndarray]:
-    """Answer an arbitrary-size query batch through the jitted pipeline.
-
-    Host-side driver around ``make_spg_serve_step``: fixed-shape padded
-    chunks of ``index.chunk`` lanes, one host sync per chunk, label-answered
-    landmark-endpoint routing.  Returns ``(dist (N,) int32,
-    edge_mask (N, E) bool)``.
+    """Answer an arbitrary-size query batch through the planner/service
+    stack (lane routing, dedup, double-buffered chunk dispatch).  Returns
+    ``(dist (N,) int32, edge_mask (N, E) bool)``.
     """
     return index.query_batch_arrays(us, vs)
 
@@ -94,11 +92,12 @@ def greedy_generate(model: Model, params, prompt_tokens, n_new: int,
         cache = pre_cache
         cache_len = jnp.int32(s)
     elif model.cfg.family == "hybrid":
-        cache = model.init_decode_cache(b, s + n_new, kv_quant=kv_quant)
+        # copy before any write: mutating the dict returned by
+        # init_decode_cache would alias whatever the model cached internally
+        cache = dict(model.init_decode_cache(b, s + n_new, kv_quant=kv_quant))
         k_pre, v_pre = pre_cache["attn"]
         k_buf, v_buf = cache["attn"]
         cache["mamba"] = pre_cache["mamba"]
-        cache = dict(cache)
         cache["attn"] = (
             k_buf.at[:, :, :s].set(k_pre.astype(k_buf.dtype))
             if not isinstance(k_buf, dict) else k_buf,

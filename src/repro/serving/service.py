@@ -1,0 +1,279 @@
+"""Async SPG serving service: lane execution over a ``QueryPlan``
+(DESIGN.md §4).
+
+The service owns *how* a planned batch runs; the planner owns *what* runs
+(``serving.planner``).  Execution policy:
+
+* **Double-buffered async dispatch.**  Every lane chunk is a jitted device
+  program returning un-synced device arrays; the service keeps up to
+  ``async_depth`` chunks in flight and only blocks on the oldest when the
+  window is full.  Host post-processing of chunk k (``device_get``,
+  per-row ``flatnonzero``, ``SPGResult`` assembly) therefore overlaps the
+  device computing chunk k+1.  ``async_depth=1`` degenerates to the
+  seed's strictly synchronous dispatch-then-sync loop and exists as the
+  benchmark baseline (``benchmarks.serving_throughput``).
+* **Result cache.**  An optional LRU keyed on the canonical pair
+  ``(min(u, v), max(u, v))`` — the same key the planner dedups on — maps
+  to ``(dist, edge_ids)``.  SPGs are orientation-invariant on an
+  undirected graph, so one entry serves both directions.  Cache lookups
+  happen at plan time (hit rows leave their lanes before any chunking);
+  inserts happen as chunks drain.
+* **Multi-device.**  With ``mesh=`` (or ``devices=``), general-lane chunks
+  run batch-sharded across local devices through
+  ``core.distributed.make_serve_step`` (replicated graph/labels, queries
+  split over the mesh via ``repro.compat.shard_map``), then re-enter the
+  shared symmetrization program.  Landmark lanes stay single-device: they
+  are label lookups plus one bounded BFS, never the serving bottleneck.
+
+``QbSIndex.query_batch`` / ``query_batch_arrays`` and
+``serving.serve_spg_batch`` are thin delegates over a default service
+(``async_depth=2``, no cache, single device), so all scale policy lives
+here.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from functools import partial
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import INF
+from .planner import (
+    LANE_GENERAL,
+    LANE_LANDMARK_PAIR,
+    LANE_ONE_SIDED,
+    LANE_TRIVIAL,
+    N_LANES,
+    QueryPlan,
+    chunk_padded,
+    onesided_roots,
+    plan_queries,
+)
+
+_NO_EDGES = np.zeros((0,), np.int64)
+_NO_EDGES.flags.writeable = False   # shared by every trivial-lane result
+
+
+class ResultCache:
+    """LRU ``(dist, edge_ids)`` cache keyed on the canonical query pair."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError("cache capacity must be positive")
+        self.capacity = int(capacity)
+        self._store: OrderedDict[tuple[int, int], tuple[int, np.ndarray]] = (
+            OrderedDict())
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: tuple[int, int]):
+        got = self._store.get(key)
+        if got is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return got
+
+    def put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+
+class ServingService:
+    """Planner-routed, lane-overlapped executor over a built ``QbSIndex``."""
+
+    def __init__(self, index, *, async_depth: int = 2, cache_size: int = 0,
+                 mesh=None, devices=None):
+        self.index = index
+        self.chunk = index.chunk
+        self.async_depth = max(1, int(async_depth))
+        self.cache = ResultCache(cache_size) if cache_size else None
+        self.lane_served = [0] * N_LANES   # unique pairs answered per lane
+
+        if mesh is None and devices is not None:
+            from jax.sharding import Mesh
+            if isinstance(devices, int):
+                avail = jax.devices()
+                if len(avail) < devices:
+                    raise ValueError(
+                        f"devices={devices} requested but only "
+                        f"{len(avail)} visible")
+                devs = avail[:devices]
+            else:
+                devs = list(devices)
+            mesh = Mesh(np.array(devs), ("q",))
+        self._sharded_general = None
+        if mesh is not None:
+            n_shards = int(np.prod(list(mesh.shape.values())))
+            if self.chunk % n_shards:
+                raise ValueError(
+                    f"chunk={self.chunk} must divide over {n_shards} shards")
+            from ..core.distributed import make_serve_step
+            self._sharded_general = make_serve_step(
+                index.ctx, index.scheme, mesh,
+                n_vertices=index.graph.n_vertices,
+                max_levels=index.max_levels, max_chain=index.max_chain,
+                use_pallas=index.use_pallas)
+
+    # -- lane dispatch -------------------------------------------------------
+
+    def _general_step(self, cu, cv):
+        if self._sharded_general is None:
+            return self.index.serve_step(cu, cv)
+        mask, dist = self._sharded_general(cu, cv)
+        from ..core.qbs import _symmetrize
+        return _symmetrize(dist, mask, self.index._rev_edge_j)
+
+    def _chunks(self, plan: QueryPlan):
+        """Yield ``(unique_rows (chunk,), live, dispatch)`` per lane chunk.
+        ``dispatch()`` enqueues the device program and returns un-synced
+        device arrays ``(dist (chunk,), edge_mask (chunk, E))``."""
+        idx = self.index
+        lid = idx._lid_np
+
+        for sel, live in chunk_padded(plan.lanes[LANE_GENERAL], self.chunk):
+            yield sel, live, partial(self._general_step,
+                                     jnp.asarray(plan.cu[sel]),
+                                     jnp.asarray(plan.cv[sel]))
+
+        for sel, live in chunk_padded(plan.lanes[LANE_LANDMARK_PAIR],
+                                      self.chunk):
+            yield sel, live, partial(idx.landmark_pair_step,
+                                     jnp.asarray(lid[plan.cu[sel]]),
+                                     jnp.asarray(lid[plan.cv[sel]]))
+
+        one = plan.lanes[LANE_ONE_SIDED]
+        if one.size:
+            roots, r_idx = onesided_roots(plan.cu[one], plan.cv[one],
+                                          idx._is_landmark_np, lid)
+            for pos, live in chunk_padded(np.arange(one.size), self.chunk):
+                yield one[pos], live, partial(idx.landmark_onesided_step,
+                                              jnp.asarray(roots[pos]),
+                                              jnp.asarray(r_idx[pos]))
+
+    def _execute(self, plan: QueryPlan) -> Iterator[tuple]:
+        """Drain all device lanes: yields host tuples ``(unique_rows,
+        dist (L,), edge_mask (L, E))`` with up to ``async_depth`` chunks in
+        flight (the double buffer: chunk k+1 is enqueued before chunk k is
+        *synced*, so host post-processing overlaps device compute).
+
+        The overlap pays where host and device are separate silicon (the
+        accelerator serving regime this targets); on a small CPU host the
+        "device" programs share cores with this thread, so sync and async
+        converge to parity there (pinned by
+        ``benchmarks/serving_throughput.py``)."""
+        inflight: deque = deque()
+
+        def drain(limit: int):
+            while len(inflight) > limit:
+                sel, live, out = inflight.popleft()
+                d, m = jax.device_get(out)
+                yield sel[:live], d[:live], m[:live]
+
+        for sel, live, dispatch in self._chunks(plan):
+            inflight.append((sel, live, dispatch()))
+            yield from drain(self.async_depth - 1)
+        yield from drain(0)
+
+    # -- cache ---------------------------------------------------------------
+
+    def _cache_partition(self, plan: QueryPlan):
+        """Pull cache hits out of the device lanes.  Returns the reduced
+        plan plus ``[(unique_row, dist, edge_ids), ...]`` hits."""
+        if self.cache is None:
+            return plan, []
+        hits = []
+        lanes = list(plan.lanes)
+        for k in (LANE_LANDMARK_PAIR, LANE_ONE_SIDED, LANE_GENERAL):
+            miss = []
+            for row in lanes[k]:
+                got = self.cache.get((int(plan.cu[row]), int(plan.cv[row])))
+                if got is None:
+                    miss.append(row)
+                else:
+                    hits.append((int(row), got[0], got[1]))
+            lanes[k] = np.asarray(miss, dtype=np.intp)
+        return plan._replace(lanes=tuple(lanes)), hits
+
+    def _cache_put(self, plan: QueryPlan, row: int, dist: int,
+                   eids: np.ndarray) -> None:
+        self.cache.put((int(plan.cu[row]), int(plan.cv[row])),
+                       (int(dist), eids))
+
+    # -- answers -------------------------------------------------------------
+
+    def _answer_unique(self, plan: QueryPlan):
+        """Answer every unique pair: ``(dist (U,) int32, edge_ids list)``."""
+        u_dist = np.full((plan.n_unique,), INF, np.int32)
+        u_eids: list = [None] * plan.n_unique
+        for row in plan.lanes[LANE_TRIVIAL]:
+            u_dist[row] = 0
+            u_eids[row] = _NO_EDGES
+        for k in range(N_LANES):
+            self.lane_served[k] += int(plan.lanes[k].size)
+        plan, hits = self._cache_partition(plan)
+        for row, d, eids in hits:
+            u_dist[row] = d
+            u_eids[row] = eids
+        for rows, d, m in self._execute(plan):
+            for k, row in enumerate(rows):
+                eids = np.flatnonzero(m[k])
+                # Frozen because the array is shared: duplicate queries fan
+                # it out to several results and the cache hands it back on
+                # later hits — an in-place mutation by a caller must not
+                # corrupt either.
+                eids.flags.writeable = False
+                u_dist[row] = d[k]
+                u_eids[row] = eids
+                if self.cache is not None:
+                    self._cache_put(plan, row, int(d[k]), eids)
+        return u_dist, u_eids
+
+    def query_batch(self, us, vs) -> list:
+        """Arbitrary batch -> per-query ``SPGResult`` list (original
+        orientation preserved; dedup/canonicalization are internal).
+
+        ``edge_ids`` arrays are read-only and may be shared between
+        duplicate queries and with the result cache."""
+        from ..core.qbs import SPGResult
+        us = np.asarray(us, np.int32).reshape(-1)
+        vs = np.asarray(vs, np.int32).reshape(-1)
+        plan = plan_queries(us, vs, self.index._is_landmark_np)
+        u_dist, u_eids = self._answer_unique(plan)
+        out = []
+        for i in range(plan.n):
+            row = plan.inv[i]
+            d = int(u_dist[row])
+            # general-lane results report the dist-derived d_top (the seed
+            # pipeline convention); planner-answered lanes never ran a
+            # sketch, so they report INF like the seed landmark path
+            d_top = d if (plan.lane[row] == LANE_GENERAL and d < INF) else INF
+            out.append(SPGResult(u=int(us[i]), v=int(vs[i]), dist=d,
+                                 edge_ids=u_eids[row], d_top=d_top))
+        return out
+
+    def query_arrays(self, us, vs) -> tuple[np.ndarray, np.ndarray]:
+        """Arbitrary batch -> raw ``(dist (N,) int32, edge_mask (N, E)
+        bool)`` arrays with no per-query result objects.  Same
+        routing/cache/execution as ``query_batch`` (one shared
+        ``_answer_unique``); only the result assembly differs."""
+        us = np.asarray(us, np.int32).reshape(-1)
+        vs = np.asarray(vs, np.int32).reshape(-1)
+        plan = plan_queries(us, vs, self.index._is_landmark_np)
+        u_dist, u_eids = self._answer_unique(plan)
+        # one dense mask, filled per query from the (sparse) unique-row
+        # edge ids — peak host memory stays a single (N, E) array however
+        # many duplicates the batch carries
+        mask = np.zeros((plan.n, self.index.graph.n_edges), bool)
+        for i, row in enumerate(plan.inv):
+            mask[i, u_eids[row]] = True
+        return u_dist[plan.inv], mask

@@ -1,0 +1,77 @@
+"""Seed-semantics serving oracle: pure numpy, no jax, no jit.
+
+The retired ``QbSIndex.query_batch_legacy`` played two roles: the old-path
+column in ``benchmarks/query_time.py`` (gone — the live service now
+benchmarks against its own sync/async modes in
+``benchmarks/serving_throughput.py``) and the bit-identity oracle for the
+serving pipeline.  The oracle role lives here, as a from-scratch
+reimplementation of the SPG contract the whole system must satisfy
+(Theorem 5.1): ``dist`` plus the exact symmetrized set of directed
+edge-slot ids lying on any shortest u-v path.  Because the contract is
+exact, any correct serving path — seed loop, planner lanes, sharded step —
+must be *bit-identical* to this on ``(dist, edge_ids)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+INF = 1 << 20  # mirrors repro.core.graph.INF; kept literal so the oracle
+               # stays importable without jax
+
+
+def _bfs_depths(src: np.ndarray, dst: np.ndarray, n: int,
+                root: int) -> np.ndarray:
+    depth = np.full((n,), INF, np.int64)
+    depth[root] = 0
+    frontier = np.zeros((n,), bool)
+    frontier[root] = True
+    level = 0
+    while frontier.any():
+        nxt = np.zeros((n,), bool)
+        nxt[dst[frontier[src]]] = True
+        nxt &= depth == INF
+        depth[nxt] = level + 1
+        frontier = nxt
+        level += 1
+    return depth
+
+
+def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    key = src.astype(np.int64) * n + dst.astype(np.int64)
+    rkey = dst.astype(np.int64) * n + src.astype(np.int64)
+    order = np.argsort(key, kind="stable")
+    return order[np.searchsorted(key[order], rkey)]
+
+
+def oracle_spg(graph, u: int, v: int) -> tuple[int, np.ndarray]:
+    """One query: ``(dist, edge_ids)`` with the exact serving conventions
+    (dist == INF sentinel when disconnected, 0 and no edges when u == v,
+    edge ids symmetrized over both orientations)."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    n = graph.n_vertices
+    if u == v:
+        return 0, np.zeros((0,), np.int64)
+    du = _bfs_depths(src, dst, n, u)
+    dv = _bfs_depths(src, dst, n, v)
+    d = int(du[v])
+    if d >= INF:
+        return INF, np.zeros((0,), np.int64)
+    mask = (du[src] + 1 + dv[dst]) == d
+    mask |= mask[_reverse_edge_map(src, dst, n)]
+    return d, np.flatnonzero(mask)
+
+
+def oracle_query_batch(graph, us, vs) -> list[tuple[int, np.ndarray]]:
+    return [oracle_spg(graph, int(u), int(v)) for u, v in zip(us, vs)]
+
+
+def assert_bit_identical(graph, results, us, vs) -> None:
+    """Assert a list of SPGResults matches the oracle bit-for-bit on
+    (u, v, dist, edge_ids)."""
+    assert len(results) == len(us)
+    for r, u, v, (d, eids) in zip(results, us, vs,
+                                  oracle_query_batch(graph, us, vs)):
+        assert (r.u, r.v) == (int(u), int(v))
+        assert r.dist == d, (r.u, r.v, r.dist, d)
+        assert np.array_equal(np.asarray(r.edge_ids), eids), (r.u, r.v)

@@ -1,11 +1,15 @@
 """Serving-path edge cases for ``QbSIndex.query_batch`` and the jitted
-pipeline: landmark-endpoint routing (label-answered path), u == v trivial
-queries, ragged batches that exercise the fixed-shape padding, and
-bit-identity between the new pipeline and the seed (legacy) loop."""
+pipeline: landmark-endpoint routing (the vectorized landmark lanes),
+u == v trivial queries, ragged batches that exercise the fixed-shape
+padding, and bit-identity against the seed-semantics oracle
+(``helpers.serving_oracle`` — the fixture that replaced the retired
+``query_batch_legacy`` loop)."""
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
+
+from helpers.serving_oracle import assert_bit_identical
 
 from repro.core import INF, QbSIndex, gnp_random_graph, grid_graph
 from repro.core.baselines import bfs_spg
@@ -71,9 +75,10 @@ def test_empty_and_all_landmark_batches(setup):
     _assert_matches_oracle(g, res)
 
 
-def test_bit_identical_to_legacy(setup):
-    """Acceptance: dist + edge sets bit-identical to the seed implementation
-    on randomized batches including landmark-endpoint and u==v queries."""
+def test_bit_identical_to_seed_oracle(setup):
+    """Acceptance: dist + edge-id arrays bit-identical to the pure-numpy
+    seed-semantics oracle on randomized batches including landmark-endpoint
+    and u==v queries (the fixture that replaced ``query_batch_legacy``)."""
     g, idx = setup
     rng = np.random.default_rng(11)
     lms = np.asarray(idx.scheme.landmarks)
@@ -84,13 +89,7 @@ def test_bit_identical_to_legacy(setup):
         # force the corner cases into every batch
         us[0] = vs[0] = int(rng.integers(0, g.n_vertices))      # u == v
         us[1] = int(lms[trial % lms.size])                       # landmark endpoint
-        new = idx.query_batch(us, vs)
-        old = idx.query_batch_legacy(us, vs)
-        for rn, ro in zip(new, old):
-            assert (rn.u, rn.v) == (ro.u, ro.v)
-            assert rn.dist == ro.dist, (rn.u, rn.v)
-            assert rn.d_top == ro.d_top, (rn.u, rn.v)
-            assert np.array_equal(rn.edge_ids, ro.edge_ids), (rn.u, rn.v)
+        assert_bit_identical(g, idx.query_batch(us, vs), us, vs)
 
 
 def test_query_batch_arrays_matches_results(setup):

@@ -1,0 +1,197 @@
+"""Planner routing + service execution: every lane, every frontier
+backend, bit-identical to the pure-numpy seed-semantics oracle
+(``helpers.serving_oracle``)."""
+import numpy as np
+import pytest
+
+from helpers.serving_oracle import assert_bit_identical, oracle_query_batch
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import (
+    LANE_GENERAL,
+    LANE_LANDMARK_PAIR,
+    LANE_ONE_SIDED,
+    LANE_TRIVIAL,
+    ServingService,
+    plan_queries,
+)
+from repro.serving.planner import chunk_padded, onesided_roots
+
+BACKEND_OPTS = {
+    "segment": {},
+    "csr": {"engine_opts": {"block_size": 64}},
+    "hybrid": {"engine_opts": {"n_hubs": 16}},
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gnp_random_graph(45, 3.2, seed=17)
+
+
+@pytest.fixture(scope="module", params=sorted(BACKEND_OPTS))
+def index(request, graph):
+    return QbSIndex.build(graph, n_landmarks=5, chunk=8,
+                          backend=request.param,
+                          **BACKEND_OPTS[request.param])
+
+
+def _mixed_batch(idx, rng, n=24):
+    """A batch that interleaves all four lanes, duplicates (same and
+    swapped orientation), and repeats across chunk boundaries."""
+    g = idx.graph
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    us[0] = vs[0] = int(non[0])            # trivial, non-landmark
+    us[1] = vs[1] = int(lms[0])            # trivial, landmark
+    us[2], vs[2] = lms[0], lms[1]          # landmark-landmark
+    us[3], vs[3] = lms[2], non[1]          # one-sided
+    us[4], vs[4] = non[2], non[3]          # general
+    us[5], vs[5] = us[4], vs[4]            # exact duplicate
+    us[6], vs[6] = vs[4], us[4]            # swapped-orientation duplicate
+    us[7], vs[7] = lms[1], lms[0]          # swapped landmark pair
+    return us, vs
+
+
+def test_lane_classification_and_dedup(index):
+    idx = index
+    rng = np.random.default_rng(0)
+    us, vs = _mixed_batch(idx, rng)
+    plan = plan_queries(us, vs, idx._is_landmark_np)
+    assert plan.n == us.size
+    # canonical: cu <= cv, every original query maps back to its pair
+    assert (plan.cu <= plan.cv).all()
+    assert np.array_equal(plan.cu[plan.inv], np.minimum(us, vs))
+    assert np.array_equal(plan.cv[plan.inv], np.maximum(us, vs))
+    # dedup folded at least the three forced duplicates (rows 5, 6 of 4;
+    # row 7 of 2) — the random tail may collide further
+    assert plan.n_unique <= plan.n - 3
+    assert plan.inv[5] == plan.inv[4] and plan.inv[6] == plan.inv[4]
+    assert plan.inv[7] == plan.inv[2]
+    # lane assignment
+    lane_of = {i: plan.lane[plan.inv[i]] for i in range(8)}
+    assert lane_of[0] == LANE_TRIVIAL and lane_of[1] == LANE_TRIVIAL
+    assert lane_of[2] == LANE_LANDMARK_PAIR
+    assert lane_of[3] == LANE_ONE_SIDED
+    assert lane_of[4] == LANE_GENERAL
+    # lanes partition the unique rows
+    assert sum(l.size for l in plan.lanes) == plan.n_unique
+
+
+def test_mixed_batch_bit_identical_to_oracle(index):
+    """All four lanes interleaved with duplicates, across several chunk
+    boundaries, on every backend."""
+    idx = index
+    rng = np.random.default_rng(7)
+    for trial in range(3):
+        us, vs = _mixed_batch(idx, rng, n=21 + trial)
+        assert_bit_identical(idx.graph, idx.query_batch(us, vs), us, vs)
+
+
+def test_landmark_only_batches(index):
+    """Batches touching only the landmark lanes (no general traffic)."""
+    idx = index
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    us = np.array([lms[0], lms[1], lms[2], lms[0], non[0], non[5]], np.int32)
+    vs = np.array([lms[1], lms[2], lms[0], lms[0], lms[3], lms[4]], np.int32)
+    assert_bit_identical(idx.graph, idx.query_batch(us, vs), us, vs)
+    plan = plan_queries(us, vs, idx._is_landmark_np)
+    assert plan.lanes[LANE_GENERAL].size == 0
+
+
+def test_cache_hit_lanes_bit_identical(index):
+    """A cached service must return bit-identical answers on re-query, and
+    the second pass must be served entirely from the cache."""
+    idx = index
+    svc = ServingService(idx, cache_size=128)
+    rng = np.random.default_rng(3)
+    us, vs = _mixed_batch(idx, rng)
+    first = svc.query_batch(us, vs)
+    assert svc.cache.hits == 0
+    second = svc.query_batch(np.flip(us), np.flip(vs))  # reordered re-query
+    plan = plan_queries(us, vs, idx._is_landmark_np)
+    n_device = plan.n_unique - plan.lanes[LANE_TRIVIAL].size
+    assert svc.cache.hits == n_device  # every non-trivial unique pair hit
+    assert_bit_identical(idx.graph, first, us, vs)
+    assert_bit_identical(idx.graph, second, np.flip(us), np.flip(vs))
+
+
+def test_async_depths_identical(index):
+    """Sync (depth 1) and deeper double-buffering give identical results."""
+    idx = index
+    rng = np.random.default_rng(5)
+    us, vs = _mixed_batch(idx, rng, n=30)
+    ref = ServingService(idx, async_depth=1).query_batch(us, vs)
+    for depth in (2, 4):
+        got = ServingService(idx, async_depth=depth).query_batch(us, vs)
+        for a, b in zip(ref, got):
+            assert a.dist == b.dist and np.array_equal(a.edge_ids, b.edge_ids)
+
+
+def test_arrays_path_matches_results(index):
+    idx = index
+    rng = np.random.default_rng(9)
+    us, vs = _mixed_batch(idx, rng)
+    dist, mask = ServingService(idx, cache_size=16).query_arrays(us, vs)
+    for k, (d, eids) in enumerate(oracle_query_batch(idx.graph, us, vs)):
+        assert int(dist[k]) == d
+        assert np.array_equal(np.flatnonzero(mask[k]), eids)
+
+
+def test_mesh_service_matches_default(graph):
+    """The batch-sharded multi-device general lane (1-device mesh here) is
+    bit-identical to the single-device service."""
+    idx = QbSIndex.build(graph, n_landmarks=5, chunk=8)
+    rng = np.random.default_rng(13)
+    us, vs = _mixed_batch(idx, rng)
+    d_ref, m_ref = idx.query_batch_arrays(us, vs)
+    d_got, m_got = ServingService(idx, devices=1).query_arrays(us, vs)
+    assert np.array_equal(d_ref, d_got)
+    assert np.array_equal(m_ref, m_got)
+
+
+def test_chunk_padded_shapes():
+    idx = np.arange(11)
+    chunks = list(chunk_padded(idx, 4))
+    assert [(c.shape[0], live) for c, live in chunks] == [(4, 4), (4, 4), (4, 3)]
+    assert np.array_equal(chunks[-1][0], [8, 9, 10, 10])  # tail repeats last
+    assert list(chunk_padded(np.arange(0), 4)) == []
+
+
+def test_onesided_roots_split(index):
+    idx = index
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    cu = np.array([min(lms[0], non[0]), min(non[1], lms[2])], np.int32)
+    cv = np.array([max(lms[0], non[0]), max(non[1], lms[2])], np.int32)
+    roots, r_idx = onesided_roots(cu, cv, idx._is_landmark_np, idx._lid_np)
+    assert np.array_equal(roots, [non[0], non[1]])
+    assert np.array_equal(r_idx, [0, 2])
+
+
+def test_empty_batch(index):
+    assert index.query_batch([], []) == []
+    dist, mask = index.query_batch_arrays([], [])
+    assert dist.shape == (0,) and mask.shape[0] == 0
+
+
+def test_d_top_reporting_convention(index):
+    """Pins the documented d_top convention: general-lane results report
+    the dist-derived d_top; planner-answered lanes (trivial — including
+    non-landmark u == v, which the seed routed through the general
+    pipeline with d_top 0 — and both landmark lanes) report INF, since no
+    sketch ran for them."""
+    idx = index
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    us = np.array([non[0], lms[0], lms[0], lms[1], non[1]], np.int32)
+    vs = np.array([non[0], lms[0], lms[1], non[2], non[3]], np.int32)
+    res = idx.query_batch(us, vs)
+    inf = 1 << 20
+    for r in res[:4]:                       # trivial + landmark lanes
+        assert r.d_top >= inf, (r.u, r.v)
+    general = res[4]
+    assert general.d_top == (general.dist if general.dist < inf else inf)
