@@ -31,6 +31,7 @@ def main() -> None:
         query_time,
         serving_throughput,
         sketch_kernel,
+        streaming_admission,
     )
     from .common import emit
 
@@ -44,6 +45,7 @@ def main() -> None:
         (coverage, {}),
         (frontier_relay, {}),
         (serving_throughput, {}),
+        (streaming_admission, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))

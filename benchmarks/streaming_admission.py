@@ -1,0 +1,201 @@
+"""Streaming admission control: open-loop arrival traces through the
+``StreamingService`` (DESIGN.md §5).
+
+Traffic arrives as a *stream* of timed groups, not a complete batch, so
+this bench drives the admission layer the way callers can't be trusted
+to: an open-loop simulation where each tick submits the tick's arrivals
+and idle gaps force a flush (the latency deadline a real deployment
+would enforce).  Three trace shapes × an arrival-rate sweep:
+
+* **steady(rate)** — ``rate`` queries per tick, deadline flush every few
+  ticks: the regime where admission should batch aggressively.
+* **bursty** — alternating full bursts and per-query trickles with idle
+  gaps: the regime adaptive chunking exists for.  A fixed-width policy
+  pads every trickle flush out to a full chunk; the adaptive policy
+  shrinks the width to the arrival rate and grows it back inside bursts.
+* **repeat-heavy** — a hub-skewed repeat stream (hot pairs touch
+  landmarks/high-degree hubs, cold traffic floods the cache): the regime
+  the hub-skew eviction policy (protected slots, ``cache_policy="hub"``)
+  exists for, compared against plain LRU at equal capacity.
+
+Policies compared at equal everything-else: ``fixed`` (admission at the
+index's build-time width, adaptive off) vs ``adaptive``; ``lru`` vs
+``hub`` caches on the repeat trace.  Timing is interleaved min-of-N
+(``common.interleaved_best``); derived columns report adaptive-vs-fixed
+speedup per trace and the two cache hit rates.  Appends one JSON record
+per invocation to BENCH.json (gated in CI by ``scripts/bench_gate.py``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import QbSIndex, barabasi_albert_graph
+from repro.serving import AdmissionPolicy, StreamingService
+
+from .common import interleaved_best
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH.json"
+
+ROUNDS = 6
+FIXED_CHUNK = 32
+RATES = (2, 8, 32)          # steady-trace arrivals per tick
+BURST = 48                  # bursty-trace burst size
+TRICKLE = 8                 # trickle ticks (1 query + flush) after a burst
+CACHE_SIZE = 20
+HOT_PAIRS = 10
+
+
+def _policies() -> dict[str, AdmissionPolicy]:
+    return {
+        "fixed": AdmissionPolicy(adaptive=False, chunk=FIXED_CHUNK),
+        "adaptive": AdmissionPolicy(adaptive=True, chunk=FIXED_CHUNK,
+                                    min_chunk=4, max_chunk=128),
+    }
+
+
+def _steady_trace(g, n: int, rate: int, seed: int) -> list[tuple]:
+    """(us, vs, flush) groups: ``rate`` arrivals per tick, deadline flush
+    every 4 ticks."""
+    rng = np.random.default_rng(seed)
+    us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    groups = []
+    for tick, start in enumerate(range(0, n, rate)):
+        sl = slice(start, start + rate)
+        groups.append((us[sl], vs[sl], tick % 4 == 3))
+    return groups
+
+
+def _bursty_trace(g, n_patterns: int, seed: int) -> list[tuple]:
+    """Alternating burst (BURST arrivals, one tick) and trickle (TRICKLE
+    ticks of one query, each ending in an idle-gap flush)."""
+    rng = np.random.default_rng(seed)
+    n = n_patterns * (BURST + TRICKLE)
+    us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    groups = []
+    pos = 0
+    for _ in range(n_patterns):
+        groups.append((us[pos:pos + BURST], vs[pos:pos + BURST], True))
+        pos += BURST
+        for _ in range(TRICKLE):
+            groups.append((us[pos:pos + 1], vs[pos:pos + 1], True))
+            pos += 1
+    return groups
+
+
+def _repeat_trace(g, idx, n: int, seed: int) -> list[tuple]:
+    """Hub-skewed repeat stream: 30% of arrivals cycle over HOT_PAIRS
+    hub-endpoint pairs, 70% are fresh cold (non-hub) pairs that flood an
+    LRU of CACHE_SIZE between hot recurrences; groups of 8, every group
+    deadline-flushed."""
+    rng = np.random.default_rng(seed)
+    prot = idx._is_landmark_np | g.hub_mask(top_frac=0.01)
+    hubs = np.flatnonzero(prot)
+    cold = np.flatnonzero(~prot)
+    hot_u = rng.choice(hubs, size=HOT_PAIRS)
+    hot_v = rng.choice(cold, size=HOT_PAIRS)
+    us = rng.choice(cold, size=n).astype(np.int32)
+    vs = rng.choice(cold, size=n).astype(np.int32)
+    hot = rng.random(n) < 0.3
+    pick = rng.integers(0, HOT_PAIRS, size=n)
+    us = np.where(hot, hot_u[pick], us).astype(np.int32)
+    vs = np.where(hot, hot_v[pick], vs).astype(np.int32)
+    return [(us[s:s + 8], vs[s:s + 8], True) for s in range(0, n, 8)]
+
+
+def _run_trace(idx, groups, policy: AdmissionPolicy, **service_kw) -> StreamingService:
+    svc = StreamingService(idx, policy=policy, **service_kw)
+    for us, vs, flush in groups:
+        svc.submit_batch(us, vs)
+        if flush:
+            svc.drain()
+    svc.drain()
+    return svc
+
+
+def run(scale: float = 1.0, **_) -> list[tuple]:
+    n_v = max(800, int(6_000 * scale))
+    g = barabasi_albert_graph(n_v, 4, seed=5)
+    idx = QbSIndex.build(g, n_landmarks=16, chunk=FIXED_CHUNK)
+    gname = f"ba-{n_v}"
+    policies = _policies()
+
+    n_steady = max(64, int(192 * scale))
+    traces = {("steady", rate): _steady_trace(g, n_steady, rate, seed=7 + rate)
+              for rate in RATES}
+    traces[("bursty", 0)] = _bursty_trace(
+        g, n_patterns=max(2, int(4 * scale)), seed=11)
+
+    rows: list[tuple] = []
+    record = {"bench": "streaming_admission", "ts": time.time(),
+              "scale": scale, "graph": gname, "V": g.n_vertices,
+              "E": g.n_edges, "fixed_chunk": FIXED_CHUNK, "rows": []}
+
+    cells = {(t, r, pname): partial(_run_trace, idx, groups, pol)
+             for (t, r), groups in traces.items()
+             for pname, pol in policies.items()}
+    best = interleaved_best(cells, rounds=ROUNDS)
+    for (trace, rate, pname), dt in best.items():
+        n_q = sum(u.size for u, _, _ in traces[(trace, rate)])
+        qps = n_q / max(dt, 1e-9)
+        speedup = best[(trace, rate, "fixed")] / max(dt, 1e-9)
+        rows.append((f"stream/{trace}{rate or ''}/{pname}/{gname}",
+                     dt / n_q * 1e6,
+                     f"qps={qps:.1f},speedup_vs_fixed={speedup:.2f}x"))
+        record["rows"].append({
+            "trace": trace, "rate": rate, "policy": pname, "qps": qps,
+            "us_per_query": dt / n_q * 1e6, "speedup_vs_fixed": speedup,
+        })
+    adaptive_speedup = (best[("bursty", 0, "fixed")]
+                        / max(best[("bursty", 0, "adaptive")], 1e-9))
+    rows.append((f"stream/adaptive_speedup_bursty/{gname}",
+                 round(adaptive_speedup, 3), f"fixed_chunk={FIXED_CHUNK}"))
+    record["adaptive_speedup_bursty"] = adaptive_speedup
+
+    # hub-skew eviction vs LRU at equal capacity on the repeat-heavy trace:
+    # hit rates from one fresh pass each (the timing loop would re-serve a
+    # warm cache), then interleaved qps
+    repeat = _repeat_trace(g, idx, n=max(96, int(256 * scale)), seed=13)
+    n_q = sum(u.size for u, _, _ in repeat)
+    hit_rates = {}
+    for cpol in ("lru", "hub"):
+        svc = _run_trace(idx, repeat, policies["adaptive"],
+                         cache_size=CACHE_SIZE, cache_policy=cpol)
+        c = svc.service.cache
+        hit_rates[cpol] = c.hits / max(c.hits + c.misses, 1)
+    best = interleaved_best(
+        {cpol: partial(_run_trace, idx, repeat, policies["adaptive"],
+                       cache_size=CACHE_SIZE, cache_policy=cpol)
+         for cpol in ("lru", "hub")},
+        rounds=ROUNDS)
+    for cpol, dt in best.items():
+        qps = n_q / max(dt, 1e-9)
+        rows.append((f"stream/repeat-heavy/{cpol}/{gname}", dt / n_q * 1e6,
+                     f"qps={qps:.1f},fresh_pass_hit_rate={hit_rates[cpol]:.2f}"))
+        record["rows"].append({
+            "trace": "repeat-heavy", "rate": 0, "policy": cpol, "qps": qps,
+            "us_per_query": dt / n_q * 1e6,
+        })
+    record["lru_hit_rate"] = hit_rates["lru"]
+    record["hub_hit_rate"] = hit_rates["hub"]
+
+    with BENCH_PATH.open("a") as f:
+        f.write(json.dumps(record) + "\n")
+    return rows
+
+
+def main() -> None:
+    from .common import emit
+
+    print("name,us_per_call,derived")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

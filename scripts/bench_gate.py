@@ -1,0 +1,165 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate: BENCH.json vs a committed baseline.
+
+BENCH.json is an append-only JSONL trajectory — every benchmark
+invocation appends one record.  This gate compares the *latest* record
+per ``(bench, scale)`` in the current file against the latest in
+``BENCH_BASELINE.json`` and fails when any tracked throughput/latency
+metric regresses beyond the threshold (default 25%, sized for shared-CI
+noise on top of the benches' own interleaved min-of-N timing).
+
+Matching is structural, not positional: rows inside a record are keyed
+by their *identifying* fields — every ``str``/``int``/``bool`` field
+that is not itself a tracked metric (graph, backend, mix, trace, rate,
+policy, V, E, ...) — so reordering rows or adding new ones never breaks
+the gate, and float-valued derived columns (speedups, hit rates, ts)
+never leak into the key.  Tracked metrics: ``qps`` (higher is better)
+and ``us_per_call`` / ``us_per_query`` (lower is better).  Rows whose
+baseline latency is under ``--min-us`` (default 50us — cache-hit hot
+loops) are noise-dominated and skipped.
+
+Baseline rows with no counterpart in the current file are reported but
+don't fail (the nightly job writes full-scale records CI never
+produces); new rows with no baseline pass silently — refresh the
+baseline in the PR that adds them:
+
+    PYTHONPATH=src python scripts/bench_gate.py [--refresh]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# metric name -> +1 (higher is better) / -1 (lower is better)
+TRACKED = {"qps": +1, "us_per_call": -1, "us_per_query": -1}
+
+
+def load_latest(path: Path, scale: float | None = None) -> dict:
+    """Latest record per (bench, scale) from a JSONL trajectory.
+    ``scale`` restricts to that scale's records — CI pins 0.25 so the
+    committed trajectory's full-scale (nightly/dev) records can never be
+    compared against a baseline no CI step reproduces."""
+    latest: dict[tuple, dict] = {}
+    if not path.exists():
+        return latest
+    with path.open() as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if scale is not None and rec.get("scale") != scale:
+                continue
+            latest[(rec.get("bench"), rec.get("scale"))] = rec
+    return latest
+
+
+def _row_key(row: dict) -> tuple:
+    """Identifying fields only: deterministic str/int/bool values that are
+    not tracked metrics (floats are measurements or derived ratios)."""
+    return tuple(sorted(
+        (k, v) for k, v in row.items()
+        if k not in TRACKED and isinstance(v, (str, int))))
+
+
+def compare(baseline: dict, current: dict, threshold: float,
+            min_us: float = 50.0) -> tuple[list, list]:
+    """Compare two ``load_latest`` maps.  Returns ``(regressions, notes)``
+    where each regression is a dict with the offending row key, metric,
+    baseline/current values and the ratio.
+
+    Rows whose *baseline* latency sits under ``min_us`` are skipped
+    entirely: sub-tens-of-microseconds timings are cache-hit hot loops
+    whose run-to-run spread dwarfs any threshold a gate could hold (the
+    skewed/cached serving row swings >2x between healthy runs)."""
+    regressions, notes = [], []
+    for rec_key, base_rec in sorted(baseline.items(), key=str):
+        cur_rec = current.get(rec_key)
+        if cur_rec is None:
+            notes.append(f"no current record for bench={rec_key[0]} "
+                         f"scale={rec_key[1]} (skipped)")
+            continue
+        cur_rows = {_row_key(r): r for r in cur_rec.get("rows", [])}
+        for base_row in base_rec.get("rows", []):
+            key = _row_key(base_row)
+            lat = [float(base_row[m]) for m in ("us_per_call", "us_per_query")
+                   if m in base_row]
+            if lat and min(lat) < min_us:
+                notes.append(f"row {dict(key)} under the {min_us:.0f}us "
+                             f"noise floor ({min(lat):.1f}us; skipped)")
+                continue
+            cur_row = cur_rows.get(key)
+            if cur_row is None:
+                notes.append(f"no current row for {dict(key)} (skipped)")
+                continue
+            for metric, sense in TRACKED.items():
+                if metric not in base_row or metric not in cur_row:
+                    continue
+                base, cur = float(base_row[metric]), float(cur_row[metric])
+                if base <= 0:
+                    continue
+                ratio = cur / base
+                bad = (ratio < 1 - threshold if sense > 0
+                       else ratio > 1 + threshold)
+                if bad:
+                    regressions.append({
+                        "bench": rec_key[0], "scale": rec_key[1],
+                        "row": dict(key), "metric": metric,
+                        "baseline": base, "current": cur, "ratio": ratio,
+                    })
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", type=Path, default=REPO / "BENCH.json")
+    ap.add_argument("--baseline", type=Path,
+                    default=REPO / "BENCH_BASELINE.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip rows whose baseline latency is below this "
+                         "(noise-dominated cache-hit loops; default 50)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="only gate/refresh records at this scale (CI "
+                         "pins 0.25; default: all)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from the current file's "
+                         "latest records instead of comparing")
+    args = ap.parse_args(argv)
+
+    current = load_latest(args.current, scale=args.scale)
+    if args.refresh:
+        with args.baseline.open("w") as f:
+            for _, rec in sorted(current.items(), key=str):
+                f.write(json.dumps(rec) + "\n")
+        print(f"baseline refreshed: {len(current)} records -> {args.baseline}")
+        return 0
+
+    baseline = load_latest(args.baseline, scale=args.scale)
+    if not baseline:
+        print(f"bench gate: no baseline at {args.baseline}; nothing to gate")
+        return 0
+    regressions, notes = compare(baseline, current, args.threshold,
+                                 min_us=args.min_us)
+    for note in notes:
+        print(f"bench gate: {note}")
+    if regressions:
+        print(f"bench gate: {len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%}:")
+        for r in regressions:
+            print(f"  FAIL {r['bench']}@scale={r['scale']} {r['row']} "
+                  f"{r['metric']}: {r['baseline']:.3f} -> {r['current']:.3f} "
+                  f"({r['ratio']:.2f}x)")
+        return 1
+    print(f"bench gate: OK ({len(baseline)} baseline records, "
+          f"threshold {args.threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """Distributed QbS: edge-sharded labelling and batch-sharded query serving.
 
-Mapping of the paper onto a TPU mesh (DESIGN.md §2, §6):
+Mapping of the paper onto a TPU mesh (DESIGN.md §2, §7):
 
 * **Labelling** (offline): the |R| BFSs are one batched frontier program.
   Edges are sharded across devices *by destination-vertex block* (blocks cut

@@ -40,6 +40,24 @@ class Graph(NamedTuple):
     def degrees(self) -> jax.Array:
         return self.indptr[1:] - self.indptr[:-1]
 
+    def hub_mask(self, n_hubs: int | None = None,
+                 top_frac: float = 0.01) -> np.ndarray:
+        """Host-side ``(V,)`` bool mask of the top-degree "hub" vertices —
+        the degree-skew metadata consumers outside the engine key on (the
+        serving cache's hub-aware eviction protects entries whose
+        endpoints land in this set).  ``n_hubs`` picks an explicit count;
+        otherwise the top ``top_frac`` of vertices (at least one).  Ties
+        break by vertex id (stable sort), matching ``select_landmarks``.
+        Derived from ``frontier.hub_split`` so there is exactly one
+        definition of "hub" (self-loop edge padding excluded from the
+        degree count: the padding vertex carries every pad slot as a self
+        loop and must never rank as a hub)."""
+        from .frontier import hub_split
+
+        if n_hubs is None:
+            n_hubs = max(1, int(self.n_vertices * top_frac))
+        return hub_split(self, int(n_hubs)).is_hub
+
     def hub_split(self, n_hubs: int | None = None):
         """Degree split for the hybrid frontier backend: the top-``n_hubs``
         vertices by (self-loop-free) degree form a dense hub block, the rest

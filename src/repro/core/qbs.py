@@ -278,6 +278,15 @@ class QbSIndex:
         from ..serving.service import ServingService
         return ServingService(self, **kw)
 
+    def make_stream(self, *, policy=None, **kw):
+        """Construct a ``serving.StreamingService``: queries arrive over
+        time (``submit``/``drain``, per-query futures) and are coalesced
+        into planner batches under an admission policy — adaptive chunk
+        width, cross-batch dedup, cache-at-submit (DESIGN.md §5).  ``kw``
+        passes through to the inner ``ServingService``."""
+        from ..serving.stream import StreamingService
+        return StreamingService(self, policy=policy, **kw)
+
     def _default_service(self):
         if self._service is None:
             self._service = self.make_service()

@@ -5,6 +5,8 @@ from .planner import (
     LANE_ONE_SIDED,
     LANE_TRIVIAL,
     QueryPlan,
+    merge_plans,
+    plan_from_pairs,
     plan_queries,
 )
 from .serve_step import (
@@ -14,21 +16,28 @@ from .serve_step import (
     make_spg_serve_step,
     serve_spg_batch,
 )
-from .service import ResultCache, ServingService
+from .service import ResultCache, ServingService, round_chunk_to_shards
+from .stream import AdmissionPolicy, QueryFuture, StreamingService
 
 __all__ = [
+    "AdmissionPolicy",
     "LANE_GENERAL",
     "LANE_LANDMARK_PAIR",
     "LANE_NAMES",
     "LANE_ONE_SIDED",
     "LANE_TRIVIAL",
+    "QueryFuture",
     "QueryPlan",
     "ResultCache",
     "ServingService",
+    "StreamingService",
     "greedy_generate",
     "make_decode_step",
     "make_prefill_step",
     "make_spg_serve_step",
-    "serve_spg_batch",
+    "merge_plans",
+    "plan_from_pairs",
     "plan_queries",
+    "round_chunk_to_shards",
+    "serve_spg_batch",
 ]

@@ -68,6 +68,28 @@ class QueryPlan(NamedTuple):
         return int(self.cu.shape[0])
 
 
+def classify_lanes(cu: np.ndarray, cv: np.ndarray,
+                   is_landmark: np.ndarray) -> np.ndarray:
+    """Lane id per canonical pair (the one routing rule, shared by every
+    plan constructor)."""
+    lm_u = is_landmark[cu]
+    lm_v = is_landmark[cv]
+    return np.where(
+        cu == cv, LANE_TRIVIAL,
+        np.where(lm_u & lm_v, LANE_LANDMARK_PAIR,
+                 np.where(lm_u ^ lm_v, LANE_ONE_SIDED, LANE_GENERAL)),
+    ).astype(np.int8)
+
+
+def d_top_of(lane: int, dist: int, inf: int) -> int:
+    """The one d_top reporting convention (seed pipeline): general-lane
+    answers report the dist-derived d_top; planner-answered lanes
+    (trivial, both landmark lanes, cache hits thereof) report ``inf``
+    because no sketch ran for them.  Shared by the one-shot service and
+    every streaming resolution path so the convention cannot drift."""
+    return dist if (lane == LANE_GENERAL and dist < inf) else inf
+
+
 def plan_queries(us: np.ndarray, vs: np.ndarray,
                  is_landmark: np.ndarray) -> QueryPlan:
     """Classify a query batch into lanes over canonical unique pairs."""
@@ -87,16 +109,50 @@ def plan_queries(us: np.ndarray, vs: np.ndarray,
     inv = rank[inv]
     cu, cv = cu[first], cv[first]
 
-    lm_u = is_landmark[cu]
-    lm_v = is_landmark[cv]
-    lane = np.where(
-        cu == cv, LANE_TRIVIAL,
-        np.where(lm_u & lm_v, LANE_LANDMARK_PAIR,
-                 np.where(lm_u ^ lm_v, LANE_ONE_SIDED, LANE_GENERAL)),
-    ).astype(np.int8)
+    lane = classify_lanes(cu, cv, is_landmark)
     lanes = tuple(np.flatnonzero(lane == k) for k in range(N_LANES))
     return QueryPlan(n=n, cu=cu, cv=cv, inv=inv.astype(np.intp), lane=lane,
                      lanes=lanes)
+
+
+def plan_from_pairs(cu: np.ndarray, cv: np.ndarray,
+                    is_landmark: np.ndarray) -> QueryPlan:
+    """Plan a set of *already canonical, already unique* pairs (``cu <=
+    cv``, no repeats) without re-running canonicalization or dedup.
+
+    The streaming admission layer (``serving.stream``) keys its pending
+    and in-flight state on canonical pairs, so by the time it admits a
+    batch the dedup work is already done; ``inv`` is the identity."""
+    cu = np.asarray(cu, np.int32).reshape(-1)
+    cv = np.asarray(cv, np.int32).reshape(-1)
+    lane = classify_lanes(cu, cv, is_landmark)
+    lanes = tuple(np.flatnonzero(lane == k) for k in range(N_LANES))
+    return QueryPlan(n=cu.shape[0], cu=cu, cv=cv,
+                     inv=np.arange(cu.shape[0], dtype=np.intp), lane=lane,
+                     lanes=lanes)
+
+
+def merge_plans(plans: list[QueryPlan],
+                is_landmark: np.ndarray) -> QueryPlan:
+    """Coalesce several planned batches into one plan, re-deduplicating
+    *across* plan boundaries — the admission-control primitive: queries
+    arriving at different times fold into a single planner batch, and a
+    pair appearing in two admissions executes once.
+
+    The merged ``inv`` indexes the concatenation of the source plans'
+    original queries (in plan order), so per-query fan-out survives the
+    merge."""
+    if not plans:
+        return plan_queries(np.zeros((0,), np.int32), np.zeros((0,), np.int32),
+                            is_landmark)
+    if len(plans) == 1:
+        return plans[0]
+    # reconstruct each plan's original canonical stream and re-plan; the
+    # pairs are already canonical (cu <= cv), so plan_queries' min/max
+    # canonicalization is a no-op and only the cross-plan dedup bites
+    cu = np.concatenate([p.cu[p.inv] for p in plans])
+    cv = np.concatenate([p.cv[p.inv] for p in plans])
+    return plan_queries(cu, cv, is_landmark)
 
 
 def chunk_padded(idx: np.ndarray, chunk: int) -> Iterator[tuple[np.ndarray, int]]:

@@ -12,12 +12,16 @@ The service owns *how* a planned batch runs; the planner owns *what* runs
   device computing chunk k+1.  ``async_depth=1`` degenerates to the
   seed's strictly synchronous dispatch-then-sync loop and exists as the
   benchmark baseline (``benchmarks.serving_throughput``).
-* **Result cache.**  An optional LRU keyed on the canonical pair
+* **Result cache.**  An optional cache keyed on the canonical pair
   ``(min(u, v), max(u, v))`` — the same key the planner dedups on — maps
   to ``(dist, edge_ids)``.  SPGs are orientation-invariant on an
   undirected graph, so one entry serves both directions.  Cache lookups
   happen at plan time (hit rows leave their lanes before any chunking);
-  inserts happen as chunks drain.
+  inserts happen as chunks drain.  ``cache_policy="lru"`` is plain LRU;
+  ``"hub"`` reserves *protected slots* for entries whose endpoints are
+  landmarks or high-degree hubs (``Graph.hub_mask``) — the hub-skew
+  eviction policy of DESIGN.md §5: hot hub pairs ride out floods of
+  one-shot cold traffic that would evict them from a pure LRU.
 * **Multi-device.**  With ``mesh=`` (or ``devices=``), general-lane chunks
   run batch-sharded across local devices through
   ``core.distributed.make_serve_step`` (replicated graph/labels, queries
@@ -32,9 +36,10 @@ here.
 """
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict, deque
 from functools import partial
-from typing import Iterator
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +54,7 @@ from .planner import (
     N_LANES,
     QueryPlan,
     chunk_padded,
+    d_top_of,
     onesided_roots,
     plan_queries,
 )
@@ -58,45 +64,102 @@ _NO_EDGES.flags.writeable = False   # shared by every trivial-lane result
 
 
 class ResultCache:
-    """LRU ``(dist, edge_ids)`` cache keyed on the canonical query pair."""
+    """``(dist, edge_ids)`` cache keyed on the canonical query pair.
 
-    def __init__(self, capacity: int):
-        if capacity <= 0:
-            raise ValueError("cache capacity must be positive")
+    Without ``protect`` this is a plain LRU.  With ``protect`` (a predicate
+    on the canonical key), ``protected_frac`` of the capacity becomes
+    *protected slots*: accepted keys live in their own LRU tier that cold
+    traffic cannot evict — eviction always drains the unprotected tier
+    first, and protected entries only leave when their own tier overflows
+    (the LRU protected entry then *demotes* into the unprotected tier
+    rather than dropping).  This is the hub-skew eviction policy: landmark-
+    and hub-endpoint pairs dominate repeat traffic, so they keep their
+    slots under floods of one-shot pairs.
+
+    ``capacity=0`` is a valid no-op cache: every ``get`` misses and ``put``
+    stores nothing (callers can keep the cache object unconditionally).
+    """
+
+    def __init__(self, capacity: int, *,
+                 protect: Callable[[tuple[int, int]], bool] | None = None,
+                 protected_frac: float = 0.5):
+        if capacity < 0:
+            raise ValueError("cache capacity must be non-negative")
         self.capacity = int(capacity)
+        self.protect = protect
+        self.protected_cap = (
+            max(1, int(capacity * protected_frac))
+            if protect is not None and capacity else 0)
         self._store: OrderedDict[tuple[int, int], tuple[int, np.ndarray]] = (
-            OrderedDict())
+            OrderedDict())   # unprotected LRU tier
+        self._protected: OrderedDict[
+            tuple[int, int], tuple[int, np.ndarray]] = OrderedDict()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        return len(self._store) + len(self._protected)
+
+    def __contains__(self, key: tuple[int, int]) -> bool:
+        return key in self._store or key in self._protected
 
     def get(self, key: tuple[int, int]):
-        got = self._store.get(key)
-        if got is None:
-            self.misses += 1
-            return None
-        self._store.move_to_end(key)
-        self.hits += 1
-        return got
+        for tier in (self._protected, self._store):
+            got = tier.get(key)
+            if got is not None:
+                tier.move_to_end(key)
+                self.hits += 1
+                return got
+        self.misses += 1
+        return None
 
     def put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
-        self._store[key] = value
-        self._store.move_to_end(key)
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+        if self.capacity == 0:
+            return
+        # a key lives in exactly one tier; re-put refreshes tier + recency
+        self._store.pop(key, None)
+        self._protected.pop(key, None)
+        if self.protected_cap and self.protect(key):
+            self._protected[key] = value
+            while len(self._protected) > self.protected_cap:
+                k, v = self._protected.popitem(last=False)
+                self._store[k] = v   # demote, don't drop
+        else:
+            self._store[key] = value
+        while len(self) > self.capacity:
+            (self._store or self._protected).popitem(last=False)
+
+
+def round_chunk_to_shards(chunk: int, n_shards: int) -> int:
+    """Round ``chunk`` up to a multiple of ``n_shards`` (the sharded
+    general lane splits every chunk evenly across the mesh devices)."""
+    if chunk <= 0:
+        raise ValueError("chunk must be positive")
+    if n_shards <= 1 or chunk % n_shards == 0:
+        return chunk
+    return ((chunk + n_shards - 1) // n_shards) * n_shards
 
 
 class ServingService:
     """Planner-routed, lane-overlapped executor over a built ``QbSIndex``."""
 
     def __init__(self, index, *, async_depth: int = 2, cache_size: int = 0,
+                 cache_policy: str = "lru", protected_frac: float = 0.5,
+                 hub_top_frac: float = 0.01, chunk: int | None = None,
                  mesh=None, devices=None):
         self.index = index
-        self.chunk = index.chunk
+        self.chunk = int(index.chunk if chunk is None else chunk)
         self.async_depth = max(1, int(async_depth))
-        self.cache = ResultCache(cache_size) if cache_size else None
+        self.cache = None
+        if cache_size:
+            if cache_policy == "lru":
+                protect = None
+            elif cache_policy == "hub":
+                protect = self._hub_protect(hub_top_frac)
+            else:
+                raise ValueError(f"unknown cache_policy={cache_policy!r}")
+            self.cache = ResultCache(cache_size, protect=protect,
+                                     protected_frac=protected_frac)
         self.lane_served = [0] * N_LANES   # unique pairs answered per lane
 
         if mesh is None and devices is not None:
@@ -112,17 +175,30 @@ class ServingService:
                 devs = list(devices)
             mesh = Mesh(np.array(devs), ("q",))
         self._sharded_general = None
+        self._n_shards = 1
         if mesh is not None:
-            n_shards = int(np.prod(list(mesh.shape.values())))
-            if self.chunk % n_shards:
-                raise ValueError(
-                    f"chunk={self.chunk} must divide over {n_shards} shards")
+            self._n_shards = int(np.prod(list(mesh.shape.values())))
+            rounded = round_chunk_to_shards(self.chunk, self._n_shards)
+            if rounded != self.chunk:
+                warnings.warn(
+                    f"chunk={self.chunk} does not divide over "
+                    f"{self._n_shards} shards; rounding up to {rounded}",
+                    stacklevel=2)
+                self.chunk = rounded
             from ..core.distributed import make_serve_step
             self._sharded_general = make_serve_step(
                 index.ctx, index.scheme, mesh,
                 n_vertices=index.graph.n_vertices,
                 max_levels=index.max_levels, max_chain=index.max_chain,
                 use_pallas=index.use_pallas)
+
+    def _hub_protect(self, hub_top_frac: float):
+        """Protect predicate for the hub-skew cache policy: a canonical
+        pair is protected when either endpoint is a landmark or a
+        top-degree hub (``Graph.hub_mask``)."""
+        prot = self.index._is_landmark_np | self.index.graph.hub_mask(
+            top_frac=hub_top_frac)
+        return lambda key: bool(prot[key[0]] or prot[key[1]])
 
     # -- lane dispatch -------------------------------------------------------
 
@@ -133,20 +209,28 @@ class ServingService:
         from ..core.qbs import _symmetrize
         return _symmetrize(dist, mask, self.index._rev_edge_j)
 
-    def _chunks(self, plan: QueryPlan):
+    def _chunks(self, plan: QueryPlan, chunk: int | None = None):
         """Yield ``(unique_rows (chunk,), live, dispatch)`` per lane chunk.
         ``dispatch()`` enqueues the device program and returns un-synced
-        device arrays ``(dist (chunk,), edge_mask (chunk, E))``."""
+        device arrays ``(dist (chunk,), edge_mask (chunk, E))``.
+
+        ``chunk`` overrides the service's width for this plan (the
+        streaming admission layer picks it adaptively); every jitted lane
+        step caches one compile per width, so callers should draw widths
+        from a small fixed set.  Sharded services silently round the
+        override up to the shard multiple."""
+        chunk = (self.chunk if chunk is None
+                 else round_chunk_to_shards(int(chunk), self._n_shards))
         idx = self.index
         lid = idx._lid_np
 
-        for sel, live in chunk_padded(plan.lanes[LANE_GENERAL], self.chunk):
+        for sel, live in chunk_padded(plan.lanes[LANE_GENERAL], chunk):
             yield sel, live, partial(self._general_step,
                                      jnp.asarray(plan.cu[sel]),
                                      jnp.asarray(plan.cv[sel]))
 
         for sel, live in chunk_padded(plan.lanes[LANE_LANDMARK_PAIR],
-                                      self.chunk):
+                                      chunk):
             yield sel, live, partial(idx.landmark_pair_step,
                                      jnp.asarray(lid[plan.cu[sel]]),
                                      jnp.asarray(lid[plan.cv[sel]]))
@@ -155,7 +239,7 @@ class ServingService:
         if one.size:
             roots, r_idx = onesided_roots(plan.cu[one], plan.cv[one],
                                           idx._is_landmark_np, lid)
-            for pos, live in chunk_padded(np.arange(one.size), self.chunk):
+            for pos, live in chunk_padded(np.arange(one.size), chunk):
                 yield one[pos], live, partial(idx.landmark_onesided_step,
                                               jnp.asarray(roots[pos]),
                                               jnp.asarray(r_idx[pos]))
@@ -253,12 +337,9 @@ class ServingService:
         for i in range(plan.n):
             row = plan.inv[i]
             d = int(u_dist[row])
-            # general-lane results report the dist-derived d_top (the seed
-            # pipeline convention); planner-answered lanes never ran a
-            # sketch, so they report INF like the seed landmark path
-            d_top = d if (plan.lane[row] == LANE_GENERAL and d < INF) else INF
             out.append(SPGResult(u=int(us[i]), v=int(vs[i]), dist=d,
-                                 edge_ids=u_eids[row], d_top=d_top))
+                                 edge_ids=u_eids[row],
+                                 d_top=d_top_of(int(plan.lane[row]), d, INF)))
         return out
 
     def query_arrays(self, us, vs) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,325 @@
+"""Streaming admission control over the serving service (DESIGN.md §5).
+
+The planner/executor pipeline (``serving.planner`` / ``serving.service``)
+answers one complete batch at a time: the caller decides what constitutes
+a batch.  Real traffic doesn't arrive that way — queries trickle and
+burst — so this module owns the *when*: a ``StreamingService`` accepts
+queries as they arrive (``submit`` / ``submit_batch`` returning per-query
+``QueryFuture``s, or the ``serve`` iterator), coalesces them across
+arrival boundaries into planner batches, and dispatches them under an
+explicit ``AdmissionPolicy``:
+
+* **Adaptive chunk size.**  The padded chunk width tracks the arrival
+  rate: it grows (powers of two up to ``max_chunk``) while the backlog
+  outruns it — heavy traffic pays fewer per-chunk dispatches — and
+  shrinks toward ``min_chunk`` when admissions run light, so bursty
+  traffic doesn't pad a trickle of live queries out to a full-width
+  chunk.  Widths stay on the power-of-two ladder, so every jitted lane
+  step compiles at most ``log2(max_chunk / min_chunk) + 1`` widths.
+* **Cross-batch coalescing + dedup.**  Pending pairs from different
+  arrivals merge into one planner batch (``planner.merge_plans``); a
+  submitted pair whose canonical key is already pending or *in flight*
+  joins the existing computation's waiter list instead of recomputing —
+  the streaming extension of the planner's within-batch dedup.
+* **Result cache.**  The inner service's canonical-pair cache
+  (``cache_policy="lru"`` or the hub-skew-aware ``"hub"``) is consulted
+  at submit time — hits resolve their futures immediately — and filled
+  as in-flight chunks drain.
+
+Dispatch itself reuses the service's lane machinery (``_chunks``) and its
+double-buffered window: up to ``async_depth`` chunks stay un-synced in
+flight **across admissions**, so device compute overlaps both host
+post-processing and the next arrivals.  ``ServingService.query_batch``
+remains the one-shot wrapper for callers that do have a complete batch;
+``StreamingService.query_batch`` (submit-all-then-drain) matches it
+bit-for-bit.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Iterable, Iterator
+
+import jax
+import numpy as np
+
+from ..core.graph import INF
+from .planner import (
+    LANE_GENERAL,
+    LANE_LANDMARK_PAIR,
+    LANE_ONE_SIDED,
+    N_LANES,
+    QueryPlan,
+    d_top_of,
+    merge_plans,
+    plan_from_pairs,
+)
+from .service import ServingService, _NO_EDGES
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Knobs of the streaming admission layer.
+
+    ``chunk`` seeds the width ladder (``None``: the index's build-time
+    chunk, clamped into ``[min_chunk, max_chunk]``).  With
+    ``adaptive=False`` the width is pinned there — the fixed-chunk
+    baseline every adaptive row benchmarks against."""
+
+    adaptive: bool = True
+    chunk: int | None = None
+    min_chunk: int = 4
+    max_chunk: int = 128
+
+    def __post_init__(self):
+        if self.min_chunk < 1:
+            raise ValueError("min_chunk must be positive")
+        # snap both bounds onto the power-of-two ladder the adaptive walk
+        # uses (min up, max down — never past the caller's stated cap), so
+        # halving/doubling can neither escape [min, max] nor mint widths
+        # off the ladder
+        object.__setattr__(self, "min_chunk",
+                           1 << (self.min_chunk - 1).bit_length())
+        object.__setattr__(self, "max_chunk",
+                           1 << (max(1, self.max_chunk).bit_length() - 1))
+        if self.max_chunk < self.min_chunk:
+            raise ValueError(
+                f"max_chunk rounds to {self.max_chunk} on the power-of-two "
+                f"ladder, below min_chunk={self.min_chunk}")
+
+    def initial_chunk(self, default: int) -> int:
+        c = default if self.chunk is None else int(self.chunk)
+        c = max(self.min_chunk, min(self.max_chunk, c))
+        # both bounds sit on the ladder, so the round-up stays in range
+        return 1 << (c - 1).bit_length()
+
+
+class QueryFuture:
+    """Handle for one submitted query; resolves when its canonical pair
+    is answered (shared by every duplicate submission of that pair)."""
+
+    __slots__ = ("u", "v", "_stream", "_result")
+
+    def __init__(self, u: int, v: int, stream: "StreamingService"):
+        self.u = int(u)
+        self.v = int(v)
+        self._stream = stream
+        self._result = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self):
+        """The ``SPGResult``; drains the stream first if still unresolved
+        (so ``.result()`` never deadlocks on an unflushed admission)."""
+        if self._result is None:
+            self._stream.drain()
+        dist, eids, d_top = self._result
+        from ..core.qbs import SPGResult
+        return SPGResult(u=self.u, v=self.v, dist=dist, edge_ids=eids,
+                         d_top=d_top)
+
+    def _resolve(self, dist: int, eids: np.ndarray, d_top: int) -> None:
+        self._result = (dist, eids, d_top)
+
+
+class StreamingService:
+    """Admission-controlled streaming front-end over a ``ServingService``.
+
+    Single-threaded event-loop style: ``submit`` buffers, admission fires
+    inline once the backlog reaches the current chunk width, ``drain``
+    flushes everything.  All execution policy below the admission layer
+    (async window, cache, mesh) belongs to the inner service — pass its
+    kwargs through (``cache_size=``, ``cache_policy=``, ``mesh=`` ...).
+    """
+
+    def __init__(self, index, *, policy: AdmissionPolicy | None = None,
+                 service: ServingService | None = None, **service_kw):
+        if service is not None and service_kw:
+            raise ValueError("pass either service= or service kwargs")
+        self.service = service or ServingService(index, **service_kw)
+        self.index = self.service.index
+        self.policy = policy or AdmissionPolicy()
+        self._chunk = self.policy.initial_chunk(self.service.chunk)
+        # one sub-plan per arrival group, planned O(group) at submit time
+        # and merged once per admission (merge_plans); keys are disjoint
+        # across sub-plans because _waiting dedups at submit
+        self._pending_plans: list[QueryPlan] = []
+        self._n_pending = 0
+        # canonical key -> [QueryFuture, ...]; present iff pending/in-flight
+        self._waiting: dict[tuple[int, int], list[QueryFuture]] = {}
+        self._inflight: deque = deque()          # (plan, sel, live, device out)
+        self.stats = {
+            "submitted": 0,        # queries accepted
+            "trivial": 0,          # resolved at submit (u == v)
+            "cache_hits": 0,       # resolved at submit from the cache
+            "joined": 0,           # joined a pending/in-flight computation
+            "admissions": 0,       # admitted planner batches
+            "admitted_pairs": 0,   # unique pairs dispatched to lanes
+            "chunks": 0,           # device chunks dispatched
+            "padded_rows": 0,      # dead rows padded into those chunks
+        }
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def chunk(self) -> int:
+        """Current adaptive chunk width."""
+        return self._chunk
+
+    @property
+    def n_pending(self) -> int:
+        return self._n_pending
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, u: int, v: int) -> QueryFuture:
+        return self.submit_batch([u], [v])[0]
+
+    def submit_batch(self, us, vs) -> list[QueryFuture]:
+        """Accept a group of queries that arrived together; returns one
+        future per query (duplicates share a resolution).  May fire an
+        admission inline when the backlog reaches the chunk width."""
+        us = np.asarray(us, np.int32).reshape(-1)
+        vs = np.asarray(vs, np.int32).reshape(-1)
+        is_l = self.index._is_landmark_np
+        cache = self.service.cache
+        futs = []
+        new_cu: list[int] = []
+        new_cv: list[int] = []
+        for u, v in zip(us.tolist(), vs.tolist()):
+            fut = QueryFuture(u, v, self)
+            futs.append(fut)
+            self.stats["submitted"] += 1
+            if u == v:
+                fut._resolve(0, _NO_EDGES, INF)
+                self.stats["trivial"] += 1
+                # lane_served semantics match the one-shot service: unique
+                # per batch, so per-arrival resolutions (trivial, cache
+                # hits) count once each and re-arrivals recount
+                self.service.lane_served[0] += 1
+                continue
+            key = (min(u, v), max(u, v))
+            waiters = self._waiting.get(key)
+            if waiters is not None:          # pending or in flight: join it
+                waiters.append(fut)
+                self.stats["joined"] += 1
+                continue
+            if cache is not None:
+                got = cache.get(key)
+                if got is not None:
+                    lane = self._lane_of(key)
+                    fut._resolve(got[0], got[1],
+                                 d_top_of(lane, got[0], INF))
+                    self.stats["cache_hits"] += 1
+                    self.service.lane_served[lane] += 1
+                    continue
+            self._waiting[key] = [fut]
+            new_cu.append(key[0])
+            new_cv.append(key[1])
+        if new_cu:
+            fresh = plan_from_pairs(np.asarray(new_cu, np.int32),
+                                    np.asarray(new_cv, np.int32), is_l)
+            self._pending_plans.append(fresh)
+            self._n_pending += fresh.n_unique
+        if self.n_pending >= self._chunk:
+            self._adapt_chunk(self.n_pending)
+            self._admit()
+        return futs
+
+    def serve(self, pairs: Iterable[tuple[int, int]]) -> Iterator:
+        """Streaming iterator entry point: consume ``(u, v)`` pairs as
+        they arrive, yield ``SPGResult``s in arrival order as they
+        resolve; drains whatever remains when the input ends."""
+        out: deque[QueryFuture] = deque()
+        for u, v in pairs:
+            out.append(self.submit(u, v))
+            while out and out[0].done():
+                yield out.popleft().result()
+        self.drain()
+        while out:
+            yield out.popleft().result()
+
+    def query_batch(self, us, vs) -> list:
+        """One-shot wrapper: submit everything, drain, collect — matches
+        ``ServingService.query_batch`` bit-for-bit."""
+        futs = self.submit_batch(us, vs)
+        self.drain()
+        return [f.result() for f in futs]
+
+    def drain(self) -> None:
+        """Admit every pending pair and resolve all in-flight work."""
+        if self._pending_plans:
+            self._adapt_chunk(self.n_pending)
+            self._admit()
+        self._sync_until(0)
+
+    # -- admission -----------------------------------------------------------
+
+    def _adapt_chunk(self, backlog: int) -> None:
+        """Track the arrival rate: double while the backlog outruns the
+        width, halve while it would fit in half of it."""
+        if not self.policy.adaptive or backlog <= 0:
+            return
+        c = self._chunk
+        while backlog > c and c < self.policy.max_chunk:
+            c <<= 1
+        while backlog <= (c >> 1) and c > self.policy.min_chunk:
+            c >>= 1
+        self._chunk = c
+
+    def _admit(self) -> None:
+        """Coalesce the pending sub-plans into one planner batch
+        (``merge_plans``) and dispatch it in chunks of the current width,
+        keeping at most ``async_depth`` chunks un-synced in flight."""
+        plans, self._pending_plans = self._pending_plans, []
+        self._n_pending = 0
+        if not plans:
+            return
+        plan = merge_plans(plans, self.index._is_landmark_np)
+        if plan.n_unique == 0:
+            return
+        svc = self.service
+        self.stats["admissions"] += 1
+        self.stats["admitted_pairs"] += plan.n_unique
+        for k in range(1, N_LANES):
+            svc.lane_served[k] += int(plan.lanes[k].size)
+        for sel, live, dispatch in svc._chunks(plan, chunk=self._chunk):
+            self._inflight.append((plan, sel, live, dispatch()))
+            self.stats["chunks"] += 1
+            self.stats["padded_rows"] += sel.shape[0] - live
+            self._sync_until(svc.async_depth - 1)
+
+    def _sync_until(self, limit: int) -> None:
+        while len(self._inflight) > limit:
+            plan, sel, live, out = self._inflight.popleft()
+            d, m = jax.device_get(out)
+            for k in range(live):
+                row = int(sel[k])
+                key = (int(plan.cu[row]), int(plan.cv[row]))
+                eids = np.flatnonzero(m[k])
+                eids.flags.writeable = False   # shared: waiters + cache
+                dist = int(d[k])
+                d_top = d_top_of(int(plan.lane[row]), dist, INF)
+                for fut in self._waiting.pop(key):
+                    fut._resolve(dist, eids, d_top)
+                if self.service.cache is not None:
+                    self.service.cache.put(key, (dist, eids))
+
+    def _lane_of(self, key: tuple[int, int]) -> int:
+        """Scalar lane classification for submit-time (cache-hit)
+        resolutions — two bool lookups, no array construction, because
+        this sits on the hot path the cache exists to make fast.  Cached
+        keys are never trivial (u == v resolves before the cache)."""
+        is_l = self.index._is_landmark_np
+        lu = bool(is_l[key[0]])
+        lv = bool(is_l[key[1]])
+        if lu and lv:
+            return LANE_LANDMARK_PAIR
+        if lu or lv:
+            return LANE_ONE_SIDED
+        return LANE_GENERAL

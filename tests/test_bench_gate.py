@@ -1,0 +1,154 @@
+"""CI benchmark-regression gate (``scripts/bench_gate.py``): compare
+logic on synthetic trajectories — a >threshold regression on any tracked
+metric fails, noise inside the threshold and improvements pass, missing
+counterparts skip with a note, and only the latest record per (bench,
+scale) is gated."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_gate", Path(__file__).resolve().parent.parent
+    / "scripts" / "bench_gate.py")
+bench_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_gate)
+
+
+def _write(path: Path, records: list[dict]) -> Path:
+    with path.open("w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    return path
+
+
+def _rec(qps: float, us: float, *, bench="b", scale=0.25, ts=1.0,
+         extra_rows=()) -> dict:
+    return {"bench": bench, "ts": ts, "scale": scale, "rows": [
+        {"mix": "uniform", "service": "sync", "qps": qps,
+         "us_per_query": us, "speedup_vs_sync": 1.0},
+        *extra_rows,
+    ]}
+
+
+def test_pass_on_identical_and_improved(tmp_path):
+    base = _write(tmp_path / "base.json", [_rec(100.0, 50.0)])
+    same = bench_gate.load_latest(base)
+    regs, notes = bench_gate.compare(same, same, 0.25)
+    assert regs == [] and notes == []
+    cur = bench_gate.load_latest(
+        _write(tmp_path / "cur.json", [_rec(180.0, 20.0)]))  # improvement
+    regs, _ = bench_gate.compare(same, cur, 0.25)
+    assert regs == []
+
+
+def test_fails_on_qps_regression_beyond_threshold(tmp_path):
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
+    cur = bench_gate.load_latest(
+        _write(tmp_path / "cur.json", [_rec(70.0, 50.0)]))   # -30% qps
+    regs, _ = bench_gate.compare(base, cur, 0.25)
+    assert len(regs) == 1
+    assert regs[0]["metric"] == "qps"
+    assert regs[0]["ratio"] == pytest.approx(0.7)
+    # 10% drop is inside the threshold
+    ok = bench_gate.load_latest(
+        _write(tmp_path / "ok.json", [_rec(90.0, 50.0)]))
+    assert bench_gate.compare(base, ok, 0.25)[0] == []
+
+
+def test_fails_on_latency_regression(tmp_path):
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
+    cur = bench_gate.load_latest(
+        _write(tmp_path / "cur.json", [_rec(100.0, 80.0)]))  # +60% latency
+    regs, _ = bench_gate.compare(base, cur, 0.25)
+    assert [r["metric"] for r in regs] == ["us_per_query"]
+
+
+def test_row_matching_is_structural_not_positional(tmp_path):
+    extra = {"mix": "skewed", "service": "cached", "qps": 500.0,
+             "us_per_query": 2000.0}
+    base = bench_gate.load_latest(_write(
+        tmp_path / "base.json", [_rec(100.0, 50.0, extra_rows=[extra])]))
+    # current has the rows reordered and the derived float changed; only
+    # the skewed row regressed
+    cur_rec = _rec(100.0, 50.0)
+    cur_rec["rows"] = [dict(extra, qps=100.0),
+                       dict(cur_rec["rows"][0], speedup_vs_sync=9.9)]
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, _ = bench_gate.compare(base, cur, 0.25)
+    assert len(regs) == 1
+    assert regs[0]["row"]["mix"] == "skewed"
+    assert regs[0]["metric"] == "qps"
+
+
+def test_missing_counterparts_skip_with_note(tmp_path):
+    base = bench_gate.load_latest(_write(tmp_path / "base.json", [
+        _rec(100.0, 50.0),
+        _rec(100.0, 50.0, bench="nightly_only", scale=1.0),
+    ]))
+    cur = bench_gate.load_latest(
+        _write(tmp_path / "cur.json", [_rec(100.0, 50.0)]))
+    regs, notes = bench_gate.compare(base, cur, 0.25)
+    assert regs == []
+    assert any("nightly_only" in n for n in notes)
+
+
+def test_noise_floor_skips_microsecond_rows(tmp_path):
+    """A sub-min_us baseline row (a cache-hit hot loop) is skipped even
+    when its qps cratered; a real row in the same record still gates."""
+    hot = {"mix": "skewed", "service": "cached", "qps": 125000.0,
+           "us_per_query": 8.0}
+    base = bench_gate.load_latest(_write(
+        tmp_path / "base.json", [_rec(100.0, 50.0, extra_rows=[hot])]))
+    cur_rec = _rec(40.0, 50.0)                       # real row regressed
+    cur_rec["rows"].append(dict(hot, qps=60000.0))   # hot row halved too
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, notes = bench_gate.compare(base, cur, 0.25, min_us=50.0)
+    assert [r["row"].get("mix") for r in regs] == ["uniform"]
+    assert any("noise floor" in n for n in notes)
+
+
+def test_scale_filter_excludes_other_scales(tmp_path):
+    """--scale restricts gating to that scale's records, so committed
+    full-scale (nightly/dev) rows can never produce a false red in CI."""
+    path = _write(tmp_path / "t.json", [
+        _rec(100.0, 50.0, scale=0.25),
+        _rec(10.0, 5000.0, scale=1.0),      # dev full-scale record
+    ])
+    assert set(bench_gate.load_latest(path)) == {("b", 0.25), ("b", 1.0)}
+    only = bench_gate.load_latest(path, scale=0.25)
+    assert set(only) == {("b", 0.25)}
+    # the regressed 1.0 record is invisible at --scale 0.25
+    cur = bench_gate.load_latest(
+        _write(tmp_path / "cur.json", [_rec(100.0, 50.0, scale=0.25),
+                                       _rec(1.0, 50000.0, scale=1.0)]),
+        scale=0.25)
+    assert bench_gate.compare(only, cur, 0.25)[0] == []
+
+
+def test_latest_record_wins(tmp_path):
+    # the older (bad) record is superseded by a newer healthy one
+    cur = bench_gate.load_latest(_write(
+        tmp_path / "cur.json", [_rec(10.0, 500.0, ts=1.0),
+                                _rec(100.0, 50.0, ts=2.0)]))
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
+    assert bench_gate.compare(base, cur, 0.25)[0] == []
+
+
+def test_main_exit_codes_and_refresh(tmp_path):
+    base = _write(tmp_path / "base.json", [_rec(100.0, 50.0)])
+    good = _write(tmp_path / "good.json", [_rec(100.0, 50.0)])
+    bad = _write(tmp_path / "bad.json", [_rec(10.0, 50.0)])
+    argv = ["--baseline", str(base)]
+    assert bench_gate.main(argv + ["--current", str(good)]) == 0
+    assert bench_gate.main(argv + ["--current", str(bad)]) == 1
+    # --refresh rewrites the baseline from the current file, then passes
+    assert bench_gate.main(argv + ["--current", str(bad), "--refresh"]) == 0
+    assert bench_gate.main(argv + ["--current", str(bad)]) == 0
+    # no baseline at all: gate is a no-op pass
+    assert bench_gate.main(["--baseline", str(tmp_path / "none.json"),
+                            "--current", str(good)]) == 0

@@ -1,6 +1,10 @@
 """Planner routing + service execution: every lane, every frontier
 backend, bit-identical to the pure-numpy seed-semantics oracle
-(``helpers.serving_oracle``)."""
+(``helpers.serving_oracle``); plus the service-level policy machinery
+(result-cache tiers and eviction, chunk padding, shard rounding)."""
+import warnings
+from types import SimpleNamespace
+
 import numpy as np
 import pytest
 
@@ -12,8 +16,10 @@ from repro.serving import (
     LANE_LANDMARK_PAIR,
     LANE_ONE_SIDED,
     LANE_TRIVIAL,
+    ResultCache,
     ServingService,
     plan_queries,
+    round_chunk_to_shards,
 )
 from repro.serving.planner import chunk_padded, onesided_roots
 
@@ -159,6 +165,103 @@ def test_chunk_padded_shapes():
     assert [(c.shape[0], live) for c, live in chunks] == [(4, 4), (4, 4), (4, 3)]
     assert np.array_equal(chunks[-1][0], [8, 9, 10, 10])  # tail repeats last
     assert list(chunk_padded(np.arange(0), 4)) == []
+
+
+def test_chunk_padded_edge_cases():
+    # exact multiple: last chunk is fully live, nothing padded
+    chunks = list(chunk_padded(np.arange(8), 4))
+    assert [live for _, live in chunks] == [4, 4]
+    # chunk wider than the lane: one padded chunk, live == lane size
+    (sel, live), = chunk_padded(np.arange(3), 8)
+    assert sel.shape == (8,) and live == 3
+    assert np.array_equal(sel, [0, 1, 2, 2, 2, 2, 2, 2])
+    # single element through a wide chunk
+    (sel, live), = chunk_padded(np.array([5]), 4)
+    assert live == 1 and np.array_equal(sel, [5, 5, 5, 5])
+
+
+def _v(i):
+    # the cache is value-agnostic; plain ints keep the assertions scalar
+    return i
+
+
+def test_result_cache_capacity_zero_and_one():
+    c = ResultCache(0)
+    c.put((1, 2), _v(1))
+    assert len(c) == 0 and c.get((1, 2)) is None
+    assert (c.hits, c.misses) == (0, 1)
+    with pytest.raises(ValueError):
+        ResultCache(-1)
+    c = ResultCache(1)
+    c.put((1, 2), _v(1))
+    c.put((3, 4), _v(2))                    # evicts the only slot
+    assert len(c) == 1
+    assert c.get((1, 2)) is None and c.get((3, 4)) == _v(2)
+
+
+def test_result_cache_lru_eviction_order():
+    c = ResultCache(2)
+    c.put((0, 1), _v(1))
+    c.put((0, 2), _v(2))
+    assert c.get((0, 1)) == _v(1)           # refresh (0, 1)'s recency
+    c.put((0, 3), _v(3))                    # evicts (0, 2), the LRU entry
+    assert c.get((0, 2)) is None
+    assert c.get((0, 1)) == _v(1) and c.get((0, 3)) == _v(3)
+    c.put((0, 1), _v(9))                    # re-put refreshes, no growth
+    assert len(c) == 2 and c.get((0, 1)) == _v(9)
+
+
+def test_result_cache_protected_slots():
+    protect = lambda key: key[0] == 0       # "hub" endpoint is vertex 0
+    c = ResultCache(4, protect=protect, protected_frac=0.5)  # 2 protected
+    c.put((0, 1), _v(1))                    # protected
+    for i in range(2, 7):                   # cold flood: 5 unprotected
+        c.put((1, i), _v(i))
+    assert len(c) == 4
+    assert c.get((0, 1)) == _v(1)           # survived the flood
+    assert c.get((1, 2)) is None            # cold LRU entries evicted
+    # protected overflow demotes (LRU-first) into the unprotected tier
+    c = ResultCache(4, protect=protect, protected_frac=0.5)
+    for i in range(1, 4):
+        c.put((0, i), _v(i))                # 3 protected > cap 2
+    assert len(c) == 3
+    assert c.get((0, 1)) == _v(1)           # demoted, still resident
+    c.put((1, 9), _v(9))
+    c.put((1, 10), _v(10))                  # overflow evicts demoted (0, 1)
+    assert c.get((0, 1)) is None
+    assert c.get((0, 2)) == _v(2) and c.get((0, 3)) == _v(3)
+    # fully-protected cache (frac=1.0) still bounds at capacity: overflow
+    # demotes the protected LRU entry, which then evicts
+    c = ResultCache(2, protect=lambda k: True, protected_frac=1.0)
+    for i in range(1, 4):
+        c.put((0, i), _v(i))
+    assert len(c) == 2 and c.get((0, 1)) is None
+    assert c.get((0, 2)) == _v(2) and c.get((0, 3)) == _v(3)
+
+
+def test_round_chunk_to_shards():
+    assert round_chunk_to_shards(32, 1) == 32
+    assert round_chunk_to_shards(32, 4) == 32
+    assert round_chunk_to_shards(10, 4) == 12
+    assert round_chunk_to_shards(1, 8) == 8
+    with pytest.raises(ValueError):
+        round_chunk_to_shards(0, 4)
+
+
+def test_service_rounds_chunk_to_shard_multiple(index, monkeypatch):
+    """A chunk that doesn't divide over the mesh rounds up with a warning
+    instead of raising (the seed behaviour)."""
+    import repro.core.distributed as distributed
+    monkeypatch.setattr(distributed, "make_serve_step",
+                        lambda *a, **kw: None)
+    mesh = SimpleNamespace(shape={"q": 4})
+    with pytest.warns(UserWarning, match="rounding up to 12"):
+        svc = ServingService(index, mesh=mesh, chunk=10)
+    assert svc.chunk == 12
+    with warnings.catch_warnings():        # exact multiple: no warning
+        warnings.simplefilter("error")
+        svc = ServingService(index, mesh=mesh, chunk=8)
+    assert svc.chunk == 8
 
 
 def test_onesided_roots_split(index):

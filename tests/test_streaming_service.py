@@ -1,0 +1,261 @@
+"""Streaming admission control (``serving.stream``): bit-identity to the
+pure-numpy seed-semantics oracle under every admission/cache/async
+policy, future semantics, cross-batch dedup, adaptive chunk tracking,
+and the hub-skew cache eviction policy."""
+import numpy as np
+import pytest
+
+from helpers.serving_oracle import assert_bit_identical
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import (
+    AdmissionPolicy,
+    ServingService,
+    StreamingService,
+    merge_plans,
+    plan_from_pairs,
+    plan_queries,
+)
+
+BACKEND_OPTS = {
+    "segment": {},
+    "csr": {"engine_opts": {"block_size": 64}},
+    "hybrid": {"engine_opts": {"n_hubs": 16}},
+}
+
+POLICIES = {
+    "adaptive": AdmissionPolicy(adaptive=True, min_chunk=2, max_chunk=32),
+    "fixed": AdmissionPolicy(adaptive=False, chunk=8),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gnp_random_graph(45, 3.2, seed=17)
+
+
+@pytest.fixture(scope="module", params=sorted(BACKEND_OPTS))
+def index(request, graph):
+    return QbSIndex.build(graph, n_landmarks=5, chunk=8,
+                          backend=request.param,
+                          **BACKEND_OPTS[request.param])
+
+
+@pytest.fixture(scope="module")
+def seg_index(graph):
+    return QbSIndex.build(graph, n_landmarks=5, chunk=8)
+
+
+def _mixed_trace(idx, rng, n=26):
+    """All four lanes + duplicates, same recipe as the planner tests."""
+    g = idx.graph
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    us[0] = vs[0] = int(non[0])            # trivial
+    us[1], vs[1] = lms[0], lms[1]          # landmark-landmark
+    us[2], vs[2] = lms[2], non[1]          # one-sided
+    us[3], vs[3] = non[2], non[3]          # general
+    us[4], vs[4] = vs[3], us[3]            # swapped duplicate
+    return us, vs
+
+
+def test_stream_bit_identical_every_policy(index):
+    """Incremental submission with interleaved drains is bit-identical to
+    the oracle on every backend × admission policy × cache policy ×
+    async depth."""
+    idx = index
+    rng = np.random.default_rng(3)
+    combos = [
+        dict(policy=POLICIES["adaptive"]),
+        dict(policy=POLICIES["fixed"], async_depth=1),
+        dict(policy=POLICIES["adaptive"], cache_size=32),
+        dict(policy=POLICIES["adaptive"], cache_size=32, cache_policy="hub"),
+    ]
+    for kw in combos:
+        us, vs = _mixed_trace(idx, rng)
+        st = StreamingService(idx, **kw)
+        futs = []
+        for k in range(us.size):
+            futs.append(st.submit(int(us[k]), int(vs[k])))
+            if k in (7, 15):               # idle gaps mid-stream
+                st.drain()
+        st.drain()
+        assert st.n_pending == 0 and st.n_inflight == 0
+        assert_bit_identical(idx.graph, [f.result() for f in futs], us, vs)
+
+
+def test_one_shot_wrapper_matches_service(seg_index):
+    """StreamingService.query_batch == ServingService.query_batch on
+    (u, v, dist, edge_ids, d_top) — including the cache-hit resolution
+    path on a repeated batch."""
+    idx = seg_index
+    rng = np.random.default_rng(5)
+    us, vs = _mixed_trace(idx, rng)
+    ref = ServingService(idx).query_batch(us, vs)
+    st = StreamingService(idx, cache_size=64)
+    for _ in range(2):                     # second pass resolves from cache
+        got = st.query_batch(us, vs)
+        for a, b in zip(ref, got):
+            assert (a.u, a.v, a.dist, a.d_top) == (b.u, b.v, b.dist, b.d_top)
+            assert np.array_equal(a.edge_ids, b.edge_ids)
+    assert st.stats["cache_hits"] > 0
+
+
+def test_futures_resolve_on_drain(seg_index):
+    idx = seg_index
+    non = np.flatnonzero(~idx._is_landmark_np)
+    st = StreamingService(idx, policy=AdmissionPolicy(adaptive=False,
+                                                      chunk=64))
+    triv = st.submit(int(non[0]), int(non[0]))
+    assert triv.done()                     # trivial resolves at submit
+    fut = st.submit(int(non[1]), int(non[2]))
+    assert not fut.done() and st.n_pending == 1   # below admission width
+    st.drain()
+    assert fut.done()
+    # result() on an unresolved future drains implicitly
+    fut2 = st.submit(int(non[3]), int(non[4]))
+    assert not fut2.done()
+    assert fut2.result().dist == fut2.result().dist   # idempotent
+    assert fut2.done()
+
+
+def test_inflight_dedup_joins(seg_index):
+    """Duplicate submissions of a pending/in-flight canonical pair join
+    the existing computation — one device answer fans out to all of them
+    (shared edge_ids array, no recompute)."""
+    idx = seg_index
+    non = np.flatnonzero(~idx._is_landmark_np)
+    st = StreamingService(idx, policy=AdmissionPolicy(adaptive=False,
+                                                      chunk=64))
+    a = st.submit(int(non[1]), int(non[2]))
+    b = st.submit(int(non[2]), int(non[1]))    # swapped orientation
+    c = st.submit(int(non[1]), int(non[2]))
+    assert st.stats["joined"] == 2
+    assert st.n_pending == 1                   # one unique pair pending
+    st.drain()
+    ra, rb, rc = a.result(), b.result(), c.result()
+    assert ra.dist == rb.dist == rc.dist
+    assert ra.edge_ids is rb.edge_ids is rc.edge_ids
+    assert (rb.u, rb.v) == (int(non[2]), int(non[1]))  # orientation kept
+    assert st.stats["admitted_pairs"] == 1
+
+
+def test_cache_hit_resolves_at_submit(seg_index):
+    idx = seg_index
+    non = np.flatnonzero(~idx._is_landmark_np)
+    st = StreamingService(idx, cache_size=16)
+    first = st.submit(int(non[1]), int(non[2]))
+    st.drain()
+    hit = st.submit(int(non[2]), int(non[1]))
+    assert hit.done()                      # resolved without device work
+    assert st.stats["cache_hits"] == 1 and st.n_pending == 0
+    assert hit.result().dist == first.result().dist
+    assert np.array_equal(hit.result().edge_ids, first.result().edge_ids)
+    assert hit.result().d_top == first.result().d_top
+
+
+def test_adaptive_chunk_tracks_backlog(seg_index):
+    idx = seg_index
+    rng = np.random.default_rng(11)
+    pol = AdmissionPolicy(adaptive=True, chunk=4, min_chunk=2, max_chunk=32)
+    st = StreamingService(idx, policy=pol)
+    assert st.chunk == 4
+    g = idx.graph
+    us = rng.integers(0, g.n_vertices, size=24).astype(np.int32)
+    vs = (us + 1 + rng.integers(0, g.n_vertices - 1, size=24)).astype(
+        np.int32) % g.n_vertices
+    st.submit_batch(us, vs)                # burst: backlog >> width
+    assert st.chunk > 4                    # grew toward the backlog
+    grown = st.chunk
+    for _ in range(4):                     # trickle ticks with idle gaps
+        st.submit(int(us[0]), int(vs[0]))
+        st.drain()
+    assert st.chunk < grown                # shrank back toward min_chunk
+    # fixed policy never moves
+    st2 = StreamingService(idx, policy=AdmissionPolicy(adaptive=False,
+                                                       chunk=8))
+    st2.submit_batch(us, vs)
+    st2.drain()
+    assert st2.chunk == 8
+
+
+def test_admission_policy_snaps_to_pow2_ladder():
+    """Off-ladder bounds snap (min up, max down) so the adaptive walk can
+    neither escape [min, max] nor mint widths off the ladder."""
+    pol = AdmissionPolicy(min_chunk=5, max_chunk=100)
+    assert (pol.min_chunk, pol.max_chunk) == (8, 64)
+    assert pol.initial_chunk(100) == 64     # never above the stated cap
+    assert pol.initial_chunk(1) == 8
+    with pytest.raises(ValueError):
+        AdmissionPolicy(min_chunk=5, max_chunk=6)   # 8 > 4 after snapping
+    with pytest.raises(ValueError):
+        AdmissionPolicy(min_chunk=0)
+
+
+def test_serve_iterator_arrival_order(seg_index):
+    idx = seg_index
+    rng = np.random.default_rng(7)
+    us, vs = _mixed_trace(idx, rng, n=18)
+    st = StreamingService(idx, cache_size=16)
+    res = list(st.serve(zip(us.tolist(), vs.tolist())))
+    assert_bit_identical(idx.graph, res, us, vs)
+
+
+def test_mesh_stream_bit_identical(graph):
+    """Streaming over a sharded (1-device mesh) service matches the
+    oracle — the adaptive widths re-round to the shard multiple."""
+    idx = QbSIndex.build(graph, n_landmarks=5, chunk=8)
+    st = StreamingService(idx, devices=1,
+                          policy=AdmissionPolicy(min_chunk=2, max_chunk=16))
+    rng = np.random.default_rng(19)
+    us, vs = _mixed_trace(idx, rng)
+    futs = st.submit_batch(us, vs)
+    st.drain()
+    assert_bit_identical(idx.graph, [f.result() for f in futs], us, vs)
+
+
+def test_hub_cache_protects_hot_hub_entries(seg_index):
+    """Flooding a small cache with cold one-shot pairs evicts a hub-pair
+    entry under LRU but not under the hub-skew policy."""
+    idx = seg_index
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~idx._is_landmark_np)
+    hot = (int(lms[0]), int(non[0]))       # landmark endpoint => protected
+    flood = [(int(non[i]), int(non[i + 1])) for i in range(1, 13)]
+    outcomes = {}
+    for cpol in ("lru", "hub"):
+        st = StreamingService(idx, cache_size=8, cache_policy=cpol)
+        st.submit(*hot)
+        st.drain()
+        for u, v in flood:                 # 12 cold inserts > capacity 8
+            st.submit(u, v)
+            st.drain()
+        before = st.stats["cache_hits"]
+        st.submit(*hot)
+        st.drain()
+        outcomes[cpol] = st.stats["cache_hits"] - before
+    assert outcomes["hub"] == 1            # survived the flood
+    assert outcomes["lru"] == 0            # evicted
+
+
+def test_plan_from_pairs_and_merge_plans(seg_index):
+    idx = seg_index
+    is_l = idx._is_landmark_np
+    lms = np.asarray(idx.scheme.landmarks)
+    non = np.flatnonzero(~is_l)
+    cu = np.minimum([lms[0], non[0]], [lms[1], non[1]]).astype(np.int32)
+    cv = np.maximum([lms[0], non[0]], [lms[1], non[1]]).astype(np.int32)
+    plan = plan_from_pairs(cu, cv, is_l)
+    assert plan.n == plan.n_unique == 2
+    assert np.array_equal(plan.inv, [0, 1])
+    ref = plan_queries(cu, cv, is_l)
+    assert np.array_equal(plan.lane, ref.lane)
+    # merging re-dedups across plan boundaries
+    other = plan_from_pairs(cu[:1], cv[:1], is_l)   # overlaps pair 0
+    merged = merge_plans([plan, other], is_l)
+    assert merged.n == 3 and merged.n_unique == 2
+    assert np.array_equal(merged.cu, plan.cu)
+    assert merge_plans([plan], is_l) is plan
+    assert merge_plans([], is_l).n == 0
