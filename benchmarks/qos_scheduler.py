@@ -1,0 +1,219 @@
+"""QoS scheduler under adversarial multi-tenant traffic (DESIGN.md §8).
+
+Open-loop two-tenant scenarios driven in *simulated* time through
+``ManualClock`` — scheduler decisions (deadline flushes, weighted slot
+shares, chunk adaptation) are a pure function of the trace, so the
+latency/share columns are deterministic and gate-safe — while wall-clock
+timing of the same scenarios feeds the qps columns:
+
+* **flood** (deadline demo) — a bulk tenant drips sub-chunk bursts every
+  tick against a large fixed chunk, so without deadlines the backlog
+  coasts toward the size trigger and *everything* (including the
+  interactive trickle riding along) queues for many ticks — the ``fifo``
+  baseline's p99.  With QoS classes, the interactive ``max_wait`` sweep
+  shows p99 queueing latency (submit -> admission, simulated) pinned at
+  or under each bound while the flood rides in the deadline rounds' spare
+  slots.
+* **contend** (weighted-share demo) — both tenants flood past the chunk
+  width every tick, so every admission round is slot-contended: deficit-
+  weighted round robin must hand the interactive class ~weight share and
+  still give the bulk tenant its own — neither starves.
+
+The run itself asserts the ISSUE's acceptance properties — interactive
+p99 <= max_wait under flood, and contended-round slot shares within
+tolerance of the weights — so a broken scheduler turns the CI bench step
+red before the gate even compares numbers.  Appends one JSON record per
+invocation to BENCH.json.  Only the deterministic simulated-time columns
+are gated by ``scripts/bench_gate.py``; the wall-clock throughput
+columns ride along as untracked floats because shared-container timing
+spread reaches the gate threshold (float-valued fields stay out of row
+keys).
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import QbSIndex, barabasi_albert_graph
+from repro.serving import AdmissionPolicy, ManualClock, QoSClass, StreamingService
+
+from .common import interleaved_best
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH.json"
+
+ROUNDS = 4
+TICK_DT = 0.001             # simulated seconds per tick
+INT_WEIGHT, BULK_WEIGHT = 4.0, 1.0
+BULK_MAX_WAIT = 0.5         # never fires inside these traces
+SWEEP_MS = (2, 8, 32)       # interactive max_wait sweep (flood trace)
+
+FLOOD_CHUNK = 64            # large width: drip arrivals coast toward it
+FLOOD_BULK, FLOOD_INT = 6, 1
+# contend: interactive banks just under the trigger, then the bulk burst
+# crosses it with a backlog several rounds deep — the first round of each
+# flush is oversubscribed on BOTH sides, which is where weights bite
+CONTEND_CHUNK = 16
+CONTEND_BULK, CONTEND_INT = 48, 14
+
+
+def _qos(max_wait_s: float | None):
+    if max_wait_s is None:
+        return None         # single default class: the fifo baseline
+    return (QoSClass("interactive", max_wait=max_wait_s, weight=INT_WEIGHT),
+            QoSClass("bulk", max_wait=BULK_MAX_WAIT, weight=BULK_WEIGHT))
+
+
+def _trace(g, n_ticks: int, bulk: int, inter: int, seed: int):
+    """Per tick: ordered (class, us, vs) sub-groups — the interactive
+    group first (it banks in the backlog below the size trigger), then
+    the bulk burst that crosses the trigger and forces the flush while
+    both classes hold work."""
+    rng = np.random.default_rng(seed)
+    n = n_ticks * (bulk + inter)
+    us = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, size=n).astype(np.int32)
+    ticks, pos = [], 0
+
+    def cut(k):
+        nonlocal pos
+        sl = (us[pos:pos + k], vs[pos:pos + k])
+        pos += k
+        return sl
+
+    for _ in range(n_ticks):
+        ticks.append([("interactive", *cut(inter)), ("bulk", *cut(bulk))])
+    return ticks
+
+
+def _run(idx, ticks, chunk: int, max_wait_s: float | None) -> StreamingService:
+    clk = ManualClock()
+    qos = _qos(max_wait_s)
+    st = StreamingService(
+        idx, clock=clk, qos=qos,
+        policy=AdmissionPolicy(adaptive=False, chunk=chunk,
+                               max_chunk=max(128, chunk)))
+    for groups in ticks:
+        for cls, gu, gv in groups:
+            if gu.size:
+                st.submit_batch(gu, gv, qos=cls if qos else None)
+        clk.advance(TICK_DT)
+    st.drain()
+    return st
+
+
+def _p99(waits) -> float:
+    return float(np.percentile(np.asarray(waits, np.float64), 99)) \
+        if len(waits) else 0.0
+
+
+def run(scale: float = 1.0, **_) -> list[tuple]:
+    n_v = max(400, int(3_000 * scale))
+    g = barabasi_albert_graph(n_v, 4, seed=9)
+    idx = QbSIndex.build(g, n_landmarks=8, chunk=CONTEND_CHUNK)
+    gname = f"ba-{n_v}"
+    n_ticks = max(16, int(48 * scale))
+    flood = _trace(g, n_ticks, FLOOD_BULK, FLOOD_INT, seed=21)
+    contend = _trace(g, n_ticks, CONTEND_BULK, CONTEND_INT, seed=22)
+
+    rows: list[tuple] = []
+    record = {"bench": "qos_scheduler", "ts": time.time(), "scale": scale,
+              "graph": gname, "V": g.n_vertices, "E": g.n_edges,
+              "tick_dt_ms": TICK_DT * 1e3, "n_ticks": n_ticks, "rows": []}
+
+    # -- flood: p99 interactive queueing latency vs the max_wait sweep -------
+    for mw_ms in SWEEP_MS:
+        st = _run(idx, flood, FLOOD_CHUNK, mw_ms / 1e3)
+        p99_us = _p99(st.qos_stats["interactive"]["waits"]) * 1e6
+        assert p99_us <= mw_ms * 1e3 + 1e-3, \
+            f"deadline breached: p99 {p99_us:.0f}us > max_wait {mw_ms}ms"
+        rows.append((f"qos/flood/deadline{mw_ms}ms/{gname}", p99_us,
+                     f"bound_us={mw_ms * 1e3:.0f},"
+                     f"deadline_flushes={st.stats['deadline_flushes']}"))
+        record["rows"].append({
+            "trace": "flood", "policy": "qos", "max_wait_ms": mw_ms,
+            "us_per_query": p99_us,          # simulated p99 queueing wait:
+        })                                   # deterministic, so gateable
+
+    # fifo contrast: one undifferentiated backlog coasts to the size
+    # trigger, so the same interactive trickle queues ~chunk/rate ticks
+    st = _run(idx, flood, FLOOD_CHUNK, None)
+    fifo_p99_us = _p99(st.qos_stats["default"]["waits"]) * 1e6
+    assert fifo_p99_us > max(SWEEP_MS[:2]) * 1e3, \
+        "flood trace failed to produce fifo queueing beyond the sweep bounds"
+    rows.append((f"qos/flood/fifo-wait/{gname}", fifo_p99_us,
+                 "policy=fifo,no_deadline"))
+    record["rows"].append({
+        "trace": "flood", "policy": "fifo", "us_per_query": fifo_p99_us,
+    })
+
+    # -- contend: deficit-weighted slot shares under a two-sided flood -------
+    # a round is *contended* when both classes still hold backlog after
+    # it (admission_log snapshots the live post-round counts): both were
+    # slot-limited, so the split reflects the weights, not availability
+    st = _run(idx, contend, CONTEND_CHUNK, 8 / 1e3)
+    contended = [r for r in st.admission_log
+                 if r["backlog"].get("bulk", 0) > 0
+                 and r["backlog"].get("interactive", 0) > 0
+                 and r["n"] == CONTEND_CHUNK]
+    slots = sum(r["n"] for r in contended)
+    bulk_slots = sum(r["per_class"].get("bulk", 0) for r in contended)
+    share = bulk_slots / slots if slots else -1.0
+    fair = BULK_WEIGHT / (BULK_WEIGHT + INT_WEIGHT)
+    assert contended, "contend trace produced no slot-contended rounds"
+    # contended rounds split slots ~by weight (deficit rounding wobbles a
+    # slot per round) ...
+    assert 0.7 * fair <= share <= 1.6 * fair, \
+        f"bulk share {share:.2f} outside tolerance of weighted {fair:.2f}"
+    # ... and over the whole trace the flood still achieves at least its
+    # weighted throughput share (the scheduler is work-conserving: capping
+    # interactive at its weight hands the spare slots to the flood)
+    admitted = {n: st.qos_stats[n]["admitted"] for n in ("interactive", "bulk")}
+    total_share = admitted["bulk"] / max(sum(admitted.values()), 1)
+    assert total_share >= fair, \
+        f"flood throughput share {total_share:.2f} fell below weighted {fair:.2f}"
+    rows.append((f"qos/contend/bulk-share/{gname}", round(share, 3),
+                 f"weighted_fair={fair:.2f},contended_rounds={len(contended)},"
+                 f"trace_share={total_share:.2f}"))
+    record["bulk_share_contended"] = share
+    record["bulk_share_trace"] = total_share
+    record["contended_rounds"] = len(contended)
+
+    # -- wall-clock throughput: scheduler overhead vs the fifo baseline.
+    # Recorded as *untracked* float keys (wall_qps/wall_us_per_query):
+    # this container's run-to-run wall-clock spread reaches the gate's
+    # 25% threshold (see .claude/skills/verify/SKILL.md), so gating these
+    # would flake — the deterministic simulated-time rows above carry the
+    # gated regression signal for the scheduler instead.
+    n_q = n_ticks * (CONTEND_BULK + CONTEND_INT)
+    best = interleaved_best({
+        "qos": partial(_run, idx, contend, CONTEND_CHUNK, 8 / 1e3),
+        "fifo": partial(_run, idx, contend, CONTEND_CHUNK, None),
+    }, rounds=ROUNDS)
+    for pname, dt in best.items():
+        qps = n_q / max(dt, 1e-9)
+        rows.append((f"qos/contend/{pname}/{gname}", dt / n_q * 1e6,
+                     f"qps={qps:.1f}"))
+        record["rows"].append({
+            "trace": "contend", "policy": pname, "wall_qps": qps,
+            "wall_us_per_query": dt / n_q * 1e6,
+        })
+    record["qos_vs_fifo"] = best["fifo"] / max(best["qos"], 1e-9)
+
+    with BENCH_PATH.open("a") as f:
+        f.write(json.dumps(record) + "\n")
+    return rows
+
+
+def main() -> None:
+    from .common import emit
+
+    print("name,us_per_call,derived")
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

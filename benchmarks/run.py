@@ -28,6 +28,7 @@ def main() -> None:
         distance_dist,
         frontier_relay,
         label_size,
+        qos_scheduler,
         query_time,
         serving_throughput,
         sketch_kernel,
@@ -46,6 +47,7 @@ def main() -> None:
         (frontier_relay, {}),
         (serving_throughput, {}),
         (streaming_admission, {}),
+        (qos_scheduler, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))

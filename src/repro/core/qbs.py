@@ -281,9 +281,11 @@ class QbSIndex:
     def make_stream(self, *, policy=None, **kw):
         """Construct a ``serving.StreamingService``: queries arrive over
         time (``submit``/``drain``, per-query futures) and are coalesced
-        into planner batches under an admission policy — adaptive chunk
-        width, cross-batch dedup, cache-at-submit (DESIGN.md §5).  ``kw``
-        passes through to the inner ``ServingService``."""
+        into planner batches under a deadline/QoS-aware scheduler —
+        adaptive chunk width, cross-batch dedup, cache-at-submit, and
+        ``qos=`` classes with ``max_wait`` deadlines + weighted shares
+        (DESIGN.md §5, §8).  ``kw`` passes through to the inner
+        ``ServingService``."""
         from ..serving.stream import StreamingService
         return StreamingService(self, policy=policy, **kw)
 

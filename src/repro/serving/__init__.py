@@ -16,11 +16,15 @@ from .serve_step import (
     make_spg_serve_step,
     serve_spg_batch,
 )
+from .clock import ManualClock, SystemClock
 from .service import ResultCache, ServingService, round_chunk_to_shards
-from .stream import AdmissionPolicy, QueryFuture, StreamingService
+from .stream import AdmissionPolicy, QoSClass, QueryFuture, StreamingService
 
 __all__ = [
     "AdmissionPolicy",
+    "ManualClock",
+    "QoSClass",
+    "SystemClock",
     "LANE_GENERAL",
     "LANE_LANDMARK_PAIR",
     "LANE_NAMES",

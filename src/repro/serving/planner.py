@@ -62,6 +62,7 @@ class QueryPlan(NamedTuple):
     inv: np.ndarray              # (n,) intp query -> unique row
     lane: np.ndarray             # (U,) int8
     lanes: tuple[np.ndarray, ...]  # per-lane unique-row indices
+    cls: np.ndarray | None = None  # (U,) int16 QoS class id (None: untagged)
 
     @property
     def n_unique(self) -> int:
@@ -91,8 +92,14 @@ def d_top_of(lane: int, dist: int, inf: int) -> int:
 
 
 def plan_queries(us: np.ndarray, vs: np.ndarray,
-                 is_landmark: np.ndarray) -> QueryPlan:
-    """Classify a query batch into lanes over canonical unique pairs."""
+                 is_landmark: np.ndarray,
+                 cls: np.ndarray | None = None) -> QueryPlan:
+    """Classify a query batch into lanes over canonical unique pairs.
+
+    ``cls`` optionally tags each *original* query with a QoS class id;
+    the unique row keeps the class of its first appearance (the class
+    that got the pair admitted — later duplicates join, they don't
+    re-route)."""
     us = np.asarray(us, np.int32).reshape(-1)
     vs = np.asarray(vs, np.int32).reshape(-1)
     n = us.shape[0]
@@ -111,25 +118,30 @@ def plan_queries(us: np.ndarray, vs: np.ndarray,
 
     lane = classify_lanes(cu, cv, is_landmark)
     lanes = tuple(np.flatnonzero(lane == k) for k in range(N_LANES))
+    u_cls = (None if cls is None
+             else np.asarray(cls, np.int16).reshape(-1)[first])
     return QueryPlan(n=n, cu=cu, cv=cv, inv=inv.astype(np.intp), lane=lane,
-                     lanes=lanes)
+                     lanes=lanes, cls=u_cls)
 
 
 def plan_from_pairs(cu: np.ndarray, cv: np.ndarray,
-                    is_landmark: np.ndarray) -> QueryPlan:
+                    is_landmark: np.ndarray,
+                    cls: np.ndarray | None = None) -> QueryPlan:
     """Plan a set of *already canonical, already unique* pairs (``cu <=
     cv``, no repeats) without re-running canonicalization or dedup.
 
-    The streaming admission layer (``serving.stream``) keys its pending
-    and in-flight state on canonical pairs, so by the time it admits a
-    batch the dedup work is already done; ``inv`` is the identity."""
+    The streaming scheduler (``serving.stream``) keys its pending and
+    in-flight state on canonical pairs, so by the time it admits a batch
+    the dedup work is already done; ``inv`` is the identity.  ``cls``
+    carries the per-pair QoS class lane the scheduler selected from."""
     cu = np.asarray(cu, np.int32).reshape(-1)
     cv = np.asarray(cv, np.int32).reshape(-1)
     lane = classify_lanes(cu, cv, is_landmark)
     lanes = tuple(np.flatnonzero(lane == k) for k in range(N_LANES))
+    u_cls = None if cls is None else np.asarray(cls, np.int16).reshape(-1)
     return QueryPlan(n=cu.shape[0], cu=cu, cv=cv,
                      inv=np.arange(cu.shape[0], dtype=np.intp), lane=lane,
-                     lanes=lanes)
+                     lanes=lanes, cls=u_cls)
 
 
 def merge_plans(plans: list[QueryPlan],
@@ -141,7 +153,8 @@ def merge_plans(plans: list[QueryPlan],
 
     The merged ``inv`` indexes the concatenation of the source plans'
     original queries (in plan order), so per-query fan-out survives the
-    merge."""
+    merge.  QoS class tags survive it too (first appearance wins, like
+    the dedup itself); plans without tags contribute class 0."""
     if not plans:
         return plan_queries(np.zeros((0,), np.int32), np.zeros((0,), np.int32),
                             is_landmark)
@@ -152,7 +165,12 @@ def merge_plans(plans: list[QueryPlan],
     # canonicalization is a no-op and only the cross-plan dedup bites
     cu = np.concatenate([p.cu[p.inv] for p in plans])
     cv = np.concatenate([p.cv[p.inv] for p in plans])
-    return plan_queries(cu, cv, is_landmark)
+    cls = None
+    if any(p.cls is not None for p in plans):
+        cls = np.concatenate([
+            (p.cls[p.inv] if p.cls is not None
+             else np.zeros((p.n,), np.int16)) for p in plans])
+    return plan_queries(cu, cv, is_landmark, cls=cls)
 
 
 def chunk_padded(idx: np.ndarray, chunk: int) -> Iterator[tuple[np.ndarray, int]]:

@@ -22,6 +22,9 @@ The service owns *how* a planned batch runs; the planner owns *what* runs
   landmarks or high-degree hubs (``Graph.hub_mask``) — the hub-skew
   eviction policy of DESIGN.md §5: hot hub pairs ride out floods of
   one-shot cold traffic that would evict them from a pure LRU.
+  ``cache_admission="reuse"`` additionally refuses *insertion* of
+  predicted one-shot cold pairs (non-hub keys are only admitted on their
+  second sighting) — DESIGN.md §8.
 * **Multi-device.**  With ``mesh=`` (or ``devices=``), general-lane chunks
   run batch-sharded across local devices through
   ``core.distributed.make_serve_step`` (replicated graph/labels, queries
@@ -145,8 +148,8 @@ class ServingService:
 
     def __init__(self, index, *, async_depth: int = 2, cache_size: int = 0,
                  cache_policy: str = "lru", protected_frac: float = 0.5,
-                 hub_top_frac: float = 0.01, chunk: int | None = None,
-                 mesh=None, devices=None):
+                 hub_top_frac: float = 0.01, cache_admission: str = "all",
+                 chunk: int | None = None, mesh=None, devices=None):
         self.index = index
         self.chunk = int(index.chunk if chunk is None else chunk)
         self.async_depth = max(1, int(async_depth))
@@ -160,6 +163,27 @@ class ServingService:
                 raise ValueError(f"unknown cache_policy={cache_policy!r}")
             self.cache = ResultCache(cache_size, protect=protect,
                                      protected_frac=protected_frac)
+        # Cache *admission* (insertion) is a separate axis from eviction
+        # (cache_policy): "all" inserts every computed result (the seed
+        # behavior); "reuse" refuses predicted one-shot cold pairs — a key
+        # is inserted only when an endpoint is a landmark/top-degree hub
+        # (the traffic skew that predicts repetition, ``Graph.hub_mask``)
+        # or when it is seen a second time (a bounded shadow set records
+        # first sightings), so a flood of never-repeated cold pairs cannot
+        # churn the cache at all, whatever the eviction policy.
+        if cache_admission not in ("all", "reuse"):
+            raise ValueError(f"unknown cache_admission={cache_admission!r}")
+        self.cache_admission = cache_admission
+        self._seen_once: OrderedDict | None = None
+        if self.cache is not None and cache_admission == "reuse":
+            # share the eviction policy's predicate when it exists so the
+            # two hub policies can never diverge on hub_top_frac (and the
+            # degree sort in Graph.hub_mask runs once)
+            self._admit_hot = (self.cache.protect
+                               if self.cache.protect is not None
+                               else self._hub_protect(hub_top_frac))
+            self._seen_once = OrderedDict()
+            self._seen_cap = max(64, 4 * self.cache.capacity)
         self.lane_served = [0] * N_LANES   # unique pairs answered per lane
 
         if mesh is None and devices is not None:
@@ -288,9 +312,25 @@ class ServingService:
             lanes[k] = np.asarray(miss, dtype=np.intp)
         return plan._replace(lanes=tuple(lanes)), hits
 
+    def cache_put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
+        """Insert a computed result through the cache *admission* policy
+        (the one insertion path — the streaming scheduler routes through
+        it too, so admission policy cannot drift between entry points)."""
+        if self.cache is None:
+            return
+        if self._seen_once is not None and key not in self.cache \
+                and not self._admit_hot(key):
+            if key not in self._seen_once:       # predicted one-shot: skip
+                self._seen_once[key] = None
+                while len(self._seen_once) > self._seen_cap:
+                    self._seen_once.popitem(last=False)
+                return
+            del self._seen_once[key]             # second sighting: admit
+        self.cache.put(key, value)
+
     def _cache_put(self, plan: QueryPlan, row: int, dist: int,
                    eids: np.ndarray) -> None:
-        self.cache.put((int(plan.cu[row]), int(plan.cv[row])),
+        self.cache_put((int(plan.cu[row]), int(plan.cv[row])),
                        (int(dist), eids))
 
     # -- answers -------------------------------------------------------------

@@ -1,60 +1,98 @@
-"""Streaming admission control over the serving service (DESIGN.md §5).
+"""Deadline- and QoS-aware streaming scheduler over the serving service
+(DESIGN.md §5 admission, §8 scheduling).
 
 The planner/executor pipeline (``serving.planner`` / ``serving.service``)
 answers one complete batch at a time: the caller decides what constitutes
 a batch.  Real traffic doesn't arrive that way — queries trickle and
-burst — so this module owns the *when*: a ``StreamingService`` accepts
+burst, and different submitters deserve different treatment — so this
+module owns the *when* and the *who*: a ``StreamingService`` accepts
 queries as they arrive (``submit`` / ``submit_batch`` returning per-query
-``QueryFuture``s, or the ``serve`` iterator), coalesces them across
-arrival boundaries into planner batches, and dispatches them under an
-explicit ``AdmissionPolicy``:
+``QueryFuture``s, or the ``serve`` iterator), tags each with a QoS class
+(``qos=``), and admits coalesced planner batches under a deficit-weighted,
+deadline-bounded scheduler:
 
-* **Adaptive chunk size.**  The padded chunk width tracks the arrival
-  rate: it grows (powers of two up to ``max_chunk``) while the backlog
-  outruns it — heavy traffic pays fewer per-chunk dispatches — and
-  shrinks toward ``min_chunk`` when admissions run light, so bursty
-  traffic doesn't pad a trickle of live queries out to a full-width
-  chunk.  Widths stay on the power-of-two ladder, so every jitted lane
-  step compiles at most ``log2(max_chunk / min_chunk) + 1`` widths.
-* **Cross-batch coalescing + dedup.**  Pending pairs from different
-  arrivals merge into one planner batch (``planner.merge_plans``); a
-  submitted pair whose canonical key is already pending or *in flight*
-  joins the existing computation's waiter list instead of recomputing —
-  the streaming extension of the planner's within-batch dedup.
-* **Result cache.**  The inner service's canonical-pair cache
-  (``cache_policy="lru"`` or the hub-skew-aware ``"hub"``) is consulted
-  at submit time — hits resolve their futures immediately — and filled
-  as in-flight chunks drain.
+* **QoS classes** (``QoSClass``).  Each class carries a ``max_wait``
+  wall-clock admission deadline and a scheduling ``weight``.  Untagged
+  traffic rides the first (default) class, which has neither — the seed
+  single-backlog behavior.
+* **Deadline flush.**  A pending pair is admitted no later than
+  ``submit_time + max_wait``: submissions and an idle-backlog timer
+  (armed through the injectable ``clock`` — ``SystemClock`` in
+  production, ``ManualClock`` in tests, see ``serving.clock``) both pump
+  the scheduler, and a deadline firing also *syncs* the in-flight window
+  so the overdue future resolves.  A query sitting alone in the backlog
+  with no further traffic is therefore bounded by its class deadline
+  instead of waiting forever on the next driver call.
+* **Deficit-weighted class shares.**  Each admission round fills at most
+  one chunk width of slots; classes with backlog split those slots in
+  proportion to their weights via deficit round-robin (fractional
+  entitlements carry over; deadline-expired pairs are taken first and
+  debited against their class), so a flooding bulk tenant cannot starve
+  interactive traffic, while an idle class's share is never wasted.
+* **Adaptive chunk size.**  As before (§5): the padded chunk width walks
+  a power-of-two ladder tracking the backlog, bounding jit cache entries.
+* **Cross-batch coalescing + dedup.**  A submitted pair whose canonical
+  key is already pending or *in flight* joins the existing computation's
+  waiter list; a join from a tighter-deadline class *promotes* the pair's
+  deadline (never its class weight accounting).
+* **Result cache.**  Consulted at submit (hits resolve immediately) and
+  filled as chunks drain through ``ServingService.cache_put`` — which
+  applies the cache *admission* policy (``cache_admission="reuse"``:
+  don't insert predicted one-shot cold pairs).
 
-Dispatch itself reuses the service's lane machinery (``_chunks``) and its
-double-buffered window: up to ``async_depth`` chunks stay un-synced in
-flight **across admissions**, so device compute overlaps both host
-post-processing and the next arrivals.  ``ServingService.query_batch``
-remains the one-shot wrapper for callers that do have a complete batch;
-``StreamingService.query_batch`` (submit-all-then-drain) matches it
-bit-for-bit.
+Dispatch reuses the service's lane machinery (``_chunks``) and its
+double-buffered window across admissions.  ``ServingService.query_batch``
+remains the one-shot wrapper; ``StreamingService.query_batch``
+(submit-all-then-drain) matches it bit-for-bit, and with the default
+single-class QoS config every pre-existing admission behavior is
+unchanged.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
+import math
+import threading
 from collections import deque
 from dataclasses import dataclass
-from typing import Iterable, Iterator
+from typing import Iterable, Iterator, Sequence
 
 import jax
 import numpy as np
 
 from ..core.graph import INF
+from .clock import ManualClock, SystemClock  # noqa: F401  (re-export)
 from .planner import (
     LANE_GENERAL,
     LANE_LANDMARK_PAIR,
     LANE_ONE_SIDED,
     N_LANES,
-    QueryPlan,
     d_top_of,
-    merge_plans,
     plan_from_pairs,
 )
 from .service import ServingService, _NO_EDGES
+
+
+@dataclass(frozen=True)
+class QoSClass:
+    """One quality-of-service class (tenant / traffic tier).
+
+    ``max_wait`` is the wall-clock admission deadline in seconds: a pair
+    submitted under this class is dispatched to the device lanes at most
+    ``max_wait`` after submission (0 = flush immediately at submit;
+    ``None`` = no deadline, the pair waits for the size trigger or a
+    drain).  ``weight`` is the deficit-round-robin share of admission
+    slots when several classes have backlog."""
+
+    name: str
+    max_wait: float | None = None
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError("QoS weight must be positive")
+        if self.max_wait is not None and self.max_wait < 0:
+            raise ValueError("max_wait must be >= 0 (or None)")
 
 
 @dataclass(frozen=True)
@@ -96,13 +134,16 @@ class AdmissionPolicy:
 
 class QueryFuture:
     """Handle for one submitted query; resolves when its canonical pair
-    is answered (shared by every duplicate submission of that pair)."""
+    is answered (shared by every duplicate submission of that pair).
+    ``qos`` records the class this submission rode in under."""
 
-    __slots__ = ("u", "v", "_stream", "_result")
+    __slots__ = ("u", "v", "qos", "_stream", "_result")
 
-    def __init__(self, u: int, v: int, stream: "StreamingService"):
+    def __init__(self, u: int, v: int, stream: "StreamingService",
+                 qos: str = "default"):
         self.u = int(u)
         self.v = int(v)
+        self.qos = qos
         self._stream = stream
         self._result = None
 
@@ -124,28 +165,53 @@ class QueryFuture:
 
 
 class StreamingService:
-    """Admission-controlled streaming front-end over a ``ServingService``.
+    """Deadline/QoS-scheduled streaming front-end over a ``ServingService``.
 
-    Single-threaded event-loop style: ``submit`` buffers, admission fires
-    inline once the backlog reaches the current chunk width, ``drain``
-    flushes everything.  All execution policy below the admission layer
-    (async window, cache, mesh) belongs to the inner service — pass its
-    kwargs through (``cache_size=``, ``cache_policy=``, ``mesh=`` ...).
+    Event-loop style with one lock: ``submit`` buffers into per-class
+    backlogs, the scheduler pumps admission rounds inline (size trigger),
+    at deadlines (timer through the injected ``clock``), and on ``drain``.
+    All execution policy below the admission layer (async window, cache +
+    cache admission, mesh) belongs to the inner service — pass its kwargs
+    through (``cache_size=``, ``cache_policy=``, ``cache_admission=``,
+    ``mesh=`` ...).
     """
 
     def __init__(self, index, *, policy: AdmissionPolicy | None = None,
+                 qos: Sequence[QoSClass] | None = None, clock=None,
                  service: ServingService | None = None, **service_kw):
         if service is not None and service_kw:
             raise ValueError("pass either service= or service kwargs")
         self.service = service or ServingService(index, **service_kw)
         self.index = self.service.index
         self.policy = policy or AdmissionPolicy()
+        self.clock = clock if clock is not None else SystemClock()
         self._chunk = self.policy.initial_chunk(self.service.chunk)
-        # one sub-plan per arrival group, planned O(group) at submit time
-        # and merged once per admission (merge_plans); keys are disjoint
-        # across sub-plans because _waiting dedups at submit
-        self._pending_plans: list[QueryPlan] = []
+
+        self._classes: tuple[QoSClass, ...] = (
+            tuple(qos) if qos else (QoSClass("default"),))
+        if len({c.name for c in self._classes}) != len(self._classes):
+            raise ValueError("duplicate QoS class names")
+        self._cls_index = {c.name: i for i, c in enumerate(self._classes)}
+        # per-class FIFO backlog of (key, seq); entries are lazily
+        # invalidated (skipped) when the key's _pending seq moved on, so
+        # _cls_backlog carries the exact live count per class
+        self._queues: list[deque] = [deque() for _ in self._classes]
+        self._cls_backlog = [0] * len(self._classes)
+        self._deficit = [0.0] * len(self._classes)
+        # canonical key -> (class idx, submit time, seq) while *pending*
+        self._pending: dict[tuple[int, int], tuple[int, float, int]] = {}
         self._n_pending = 0
+        # canonical key -> earliest admission/resolution deadline while
+        # the key is unresolved (pending or in flight); _heap holds
+        # (deadline, seq, key) entries, stale ones dropped lazily
+        self._deadline: dict[tuple[int, int], float] = {}
+        self._heap: list[tuple[float, int, tuple[int, int]]] = []
+        self._seq = itertools.count()
+        self._timer = None
+        self._timer_token = None
+        self._armed_for: float | None = None
+        # serializes submit/drain/poll against clock-thread deadline fires
+        self._lock = threading.RLock()
         # canonical key -> [QueryFuture, ...]; present iff pending/in-flight
         self._waiting: dict[tuple[int, int], list[QueryFuture]] = {}
         self._inflight: deque = deque()          # (plan, sel, live, device out)
@@ -154,11 +220,24 @@ class StreamingService:
             "trivial": 0,          # resolved at submit (u == v)
             "cache_hits": 0,       # resolved at submit from the cache
             "joined": 0,           # joined a pending/in-flight computation
-            "admissions": 0,       # admitted planner batches
+            "admissions": 0,       # flushes dispatched (1 plan each; the
+                                   # per-round detail lives in admission_log)
             "admitted_pairs": 0,   # unique pairs dispatched to lanes
             "chunks": 0,           # device chunks dispatched
             "padded_rows": 0,      # dead rows padded into those chunks
+            "deadline_flushes": 0,  # flushes containing an expired pair
         }
+        # waits are wall-clock (injected-clock) seconds from submit to
+        # admission — the queueing latency the deadline bounds; bounded
+        # deques so a long-running service cannot grow host memory
+        self.qos_stats = {
+            c.name: {"submitted": 0, "trivial": 0, "cache_hits": 0,
+                     "joined": 0, "admitted": 0, "expired": 0,
+                     "waits": deque(maxlen=65536)}
+            for c in self._classes}
+        # one entry per admission round: composition + backlog snapshot
+        # (the observability the fairness tests and benchmarks read)
+        self.admission_log: deque = deque(maxlen=4096)
 
     # -- introspection -------------------------------------------------------
 
@@ -175,69 +254,98 @@ class StreamingService:
     def n_inflight(self) -> int:
         return len(self._inflight)
 
+    @property
+    def qos_classes(self) -> tuple[QoSClass, ...]:
+        return self._classes
+
     # -- submission ----------------------------------------------------------
 
-    def submit(self, u: int, v: int) -> QueryFuture:
-        return self.submit_batch([u], [v])[0]
+    def submit(self, u: int, v: int, qos: str | None = None) -> QueryFuture:
+        return self.submit_batch([u], [v], qos=qos)[0]
 
-    def submit_batch(self, us, vs) -> list[QueryFuture]:
-        """Accept a group of queries that arrived together; returns one
-        future per query (duplicates share a resolution).  May fire an
-        admission inline when the backlog reaches the chunk width."""
+    def submit_batch(self, us, vs, qos: str | None = None) -> list[QueryFuture]:
+        """Accept a group of queries that arrived together under one QoS
+        class (``None``: the default class); returns one future per query
+        (duplicates share a resolution).  May fire admission rounds inline
+        when the backlog reaches the chunk width or a deadline (including
+        ``max_wait=0``: flush now) expires."""
         us = np.asarray(us, np.int32).reshape(-1)
         vs = np.asarray(vs, np.int32).reshape(-1)
-        is_l = self.index._is_landmark_np
-        cache = self.service.cache
-        futs = []
-        new_cu: list[int] = []
-        new_cv: list[int] = []
-        for u, v in zip(us.tolist(), vs.tolist()):
-            fut = QueryFuture(u, v, self)
-            futs.append(fut)
-            self.stats["submitted"] += 1
-            if u == v:
-                fut._resolve(0, _NO_EDGES, INF)
-                self.stats["trivial"] += 1
-                # lane_served semantics match the one-shot service: unique
-                # per batch, so per-arrival resolutions (trivial, cache
-                # hits) count once each and re-arrivals recount
-                self.service.lane_served[0] += 1
-                continue
-            key = (min(u, v), max(u, v))
-            waiters = self._waiting.get(key)
-            if waiters is not None:          # pending or in flight: join it
-                waiters.append(fut)
-                self.stats["joined"] += 1
-                continue
-            if cache is not None:
-                got = cache.get(key)
-                if got is not None:
-                    lane = self._lane_of(key)
-                    fut._resolve(got[0], got[1],
-                                 d_top_of(lane, got[0], INF))
-                    self.stats["cache_hits"] += 1
-                    self.service.lane_served[lane] += 1
+        with self._lock:
+            if qos is None:
+                ci = 0
+            elif qos in self._cls_index:
+                ci = self._cls_index[qos]
+            else:
+                raise ValueError(
+                    f"unknown qos class {qos!r}; configured: "
+                    f"{[c.name for c in self._classes]}")
+            cls = self._classes[ci]
+            cstat = self.qos_stats[cls.name]
+            now = self.clock.now()
+            deadline = None if cls.max_wait is None else now + cls.max_wait
+            cache = self.service.cache
+            futs = []
+            for u, v in zip(us.tolist(), vs.tolist()):
+                fut = QueryFuture(u, v, self, qos=cls.name)
+                futs.append(fut)
+                self.stats["submitted"] += 1
+                cstat["submitted"] += 1
+                if u == v:
+                    fut._resolve(0, _NO_EDGES, INF)
+                    self.stats["trivial"] += 1
+                    cstat["trivial"] += 1
+                    # lane_served semantics match the one-shot service:
+                    # unique per batch, so per-arrival resolutions (trivial,
+                    # cache hits) count once each and re-arrivals recount
+                    self.service.lane_served[0] += 1
                     continue
-            self._waiting[key] = [fut]
-            new_cu.append(key[0])
-            new_cv.append(key[1])
-        if new_cu:
-            fresh = plan_from_pairs(np.asarray(new_cu, np.int32),
-                                    np.asarray(new_cv, np.int32), is_l)
-            self._pending_plans.append(fresh)
-            self._n_pending += fresh.n_unique
-        if self.n_pending >= self._chunk:
-            self._adapt_chunk(self.n_pending)
-            self._admit()
+                key = (min(u, v), max(u, v))
+                waiters = self._waiting.get(key)
+                if waiters is not None:      # pending or in flight: join it
+                    waiters.append(fut)
+                    self.stats["joined"] += 1
+                    cstat["joined"] += 1
+                    if deadline is not None and \
+                            deadline < self._deadline.get(key, math.inf):
+                        # promote the deadline (tighter class joined a
+                        # pending/in-flight pair); weight accounting keeps
+                        # the admitting class
+                        self._deadline[key] = deadline
+                        heapq.heappush(self._heap,
+                                       (deadline, next(self._seq), key))
+                    continue
+                if cache is not None:
+                    got = cache.get(key)
+                    if got is not None:
+                        lane = self._lane_of(key)
+                        fut._resolve(got[0], got[1],
+                                     d_top_of(lane, got[0], INF))
+                        self.stats["cache_hits"] += 1
+                        cstat["cache_hits"] += 1
+                        self.service.lane_served[lane] += 1
+                        continue
+                self._waiting[key] = [fut]
+                seq = next(self._seq)
+                self._pending[key] = (ci, now, seq)
+                self._queues[ci].append((key, seq))
+                self._cls_backlog[ci] += 1
+                self._n_pending += 1
+                if deadline is not None:
+                    self._deadline[key] = deadline
+                    heapq.heappush(self._heap, (deadline, seq, key))
+            self._pump()
+            self._arm_timer()
         return futs
 
-    def serve(self, pairs: Iterable[tuple[int, int]]) -> Iterator:
+    def serve(self, pairs: Iterable[tuple[int, int]],
+              qos: str | None = None) -> Iterator:
         """Streaming iterator entry point: consume ``(u, v)`` pairs as
         they arrive, yield ``SPGResult``s in arrival order as they
         resolve; drains whatever remains when the input ends."""
         out: deque[QueryFuture] = deque()
         for u, v in pairs:
-            out.append(self.submit(u, v))
+            out.append(self.submit(u, v, qos=qos))
             while out and out[0].done():
                 yield out.popleft().result()
         self.drain()
@@ -253,12 +361,20 @@ class StreamingService:
 
     def drain(self) -> None:
         """Admit every pending pair and resolve all in-flight work."""
-        if self._pending_plans:
-            self._adapt_chunk(self.n_pending)
-            self._admit()
-        self._sync_until(0)
+        with self._lock:
+            self._pump(force=True)
+            self._sync_until(0)
+            self._arm_timer()
 
-    # -- admission -----------------------------------------------------------
+    def poll(self) -> None:
+        """Deadline tick for external drivers: admit whatever is due at
+        the current (injected) clock without submitting new traffic.  A
+        no-op on an empty backlog — stale timer wakeups are safe."""
+        with self._lock:
+            self._pump()
+            self._arm_timer()
+
+    # -- the scheduler -------------------------------------------------------
 
     def _adapt_chunk(self, backlog: int) -> None:
         """Track the arrival rate: double while the backlog outruns the
@@ -272,20 +388,184 @@ class StreamingService:
             c >>= 1
         self._chunk = c
 
-    def _admit(self) -> None:
-        """Coalesce the pending sub-plans into one planner batch
-        (``merge_plans``) and dispatch it in chunks of the current width,
-        keeping at most ``async_depth`` chunks un-synced in flight."""
-        plans, self._pending_plans = self._pending_plans, []
-        self._n_pending = 0
-        if not plans:
+    def _pump(self, force: bool = False) -> None:
+        """The admission loop.  Triggers: an expired deadline (flush the
+        overdue pairs now, plus a weighted fill of the rest of the
+        round), the size trigger (backlog reached the chunk width), or
+        ``force`` (drain).  Once *any* trigger fires, scheduling rounds
+        repeat until the backlog drains — the §5 flush-everything
+        semantics, so a burst's sub-chunk tail is never stranded behind
+        the size trigger — with each round's slots still split by class
+        weight: under contention the weights shape dispatch *order*,
+        never total work.  The rounds of one flush dispatch as a single
+        dense planner batch (``_admit_flush``).  A deadline-triggered
+        flush also syncs the in-flight window so the overdue futures
+        *resolve* within their bound, not just dispatch."""
+        now = self.clock.now()
+        expired, expired_inflight = self._pop_expired(now)
+        if not (force or expired or self._n_pending >= self._chunk):
+            if expired_inflight:
+                self._sync_until(0)
             return
-        plan = merge_plans(plans, self.index._is_landmark_np)
-        if plan.n_unique == 0:
-            return
+        self._adapt_chunk(self._n_pending + len(expired))
+        # rounds are the *scheduling* unit (weighted slot accounting,
+        # admission_log); the whole flush then plans and dispatches as
+        # ONE batch so lanes pack densely across round boundaries — a
+        # mixed-lane flush pays per-lane padding once, not per round
+        rounds: list[tuple[list, int]] = []
+        batch = expired + self._drr_select(self._chunk - len(expired))
+        while batch:
+            self._log_round(batch, now, n_expired=len(expired))
+            rounds.append((batch, len(expired)))
+            expired = []
+            batch = self._drr_select(self._chunk)
+        if rounds:
+            self._admit_flush(rounds, now)
+        if (rounds and rounds[0][1]) or expired_inflight:
+            self._sync_until(0)
+
+    def _pop_expired(self, now: float):
+        """Pop every deadline due at ``now``.  Returns the expired
+        *pending* entries (removed from the backlog, ready to admit) and
+        whether any expired key is already in flight (its round must end
+        in a full sync so the overdue future resolves)."""
+        expired, expired_inflight = [], False
+        while self._heap and self._heap[0][0] <= now:
+            dl, _, key = heapq.heappop(self._heap)
+            if self._deadline.get(key) != dl:
+                continue                          # stale (promoted/resolved)
+            del self._deadline[key]
+            ent = self._pending.get(key)
+            if ent is not None:
+                ci, t_enq, _ = ent
+                del self._pending[key]
+                self._n_pending -= 1
+                self._cls_backlog[ci] -= 1
+                # charged outside its share; debt is clamped to one round
+                # so a long quiet trickle of expiries cannot bank enough
+                # debt to suppress the class's weighted share for ages
+                self._deficit[ci] = max(self._deficit[ci] - 1.0,
+                                        -float(self._chunk))
+                self.qos_stats[self._classes[ci].name]["expired"] += 1
+                expired.append((key, ci, t_enq))
+            elif key in self._waiting:
+                expired_inflight = True           # joined an in-flight pair
+        return expired, expired_inflight
+
+    def _take_from(self, ci: int):
+        """Pop the oldest valid pending key of class ``ci`` (skipping
+        entries invalidated by expiry-admission or re-submission), or
+        None when the class backlog is empty."""
+        q = self._queues[ci]
+        while q:
+            key, seq = q.popleft()
+            ent = self._pending.get(key)
+            if ent is not None and ent[2] == seq:
+                del self._pending[key]
+                self._n_pending -= 1
+                self._cls_backlog[ci] -= 1
+                # the deadline entry stays until *resolution*: if this
+                # pair lingers un-synced in the async window, the timer
+                # still fires and syncs it within its bound
+                return (key, ci, ent[1])
+        return None
+
+    def _drr_select(self, budget: int) -> list:
+        """Deficit-weighted round-robin: split ``budget`` admission slots
+        across the classes that have backlog, in proportion to their
+        weights.  Fractional entitlements accumulate in per-class deficit
+        counters (so small weights still get served), a class's deficit
+        resets when its backlog empties (no hoarding while idle), and any
+        slots left by short queues top up from the remaining classes —
+        a full round is never under-filled while backlog exists."""
+        sel: list = []
+        if budget <= 0 or self._n_pending == 0:
+            return sel
+        active = [i for i, n in enumerate(self._cls_backlog) if n > 0]
+        total_w = sum(self._classes[i].weight for i in active)
+        for i in active:
+            self._deficit[i] += budget * self._classes[i].weight / total_w
+        empty = set()
+        progress = True
+        while len(sel) < budget and progress and self._n_pending:
+            progress = False
+            for i in active:
+                if len(sel) >= budget:
+                    break
+                if i in empty or self._deficit[i] < 1.0:
+                    continue
+                got = self._take_from(i)
+                if got is None:
+                    empty.add(i)
+                    self._deficit[i] = 0.0
+                    continue
+                sel.append(got)
+                self._deficit[i] -= 1.0
+                progress = True
+        # top-up: deficits all fractional (or negative after expiry debits)
+        # but slots and backlog remain — grant the largest-deficit class
+        while len(sel) < budget and self._n_pending:
+            live = [i for i in active if i not in empty]
+            if not live:
+                break
+            i = max(live, key=lambda j: self._deficit[j])
+            got = self._take_from(i)
+            if got is None:
+                empty.add(i)
+                self._deficit[i] = 0.0
+                continue
+            sel.append(got)
+            self._deficit[i] = max(self._deficit[i] - 1.0,
+                                   -float(self._chunk))
+        # no hoarding while idle: a class whose backlog just drained must
+        # not bank this round's unspent entitlement for a later flood
+        # (the in-loop resets only fire when a take is *attempted*)
+        for i in active:
+            if self._cls_backlog[i] == 0:
+                self._deficit[i] = 0.0
+        return sel
+
+    def _log_round(self, batch: list, now: float, n_expired: int) -> None:
+        """One admission_log entry per scheduling round, recorded at
+        selection time so the backlog snapshot is the round's live
+        leftover — the signal the fairness analyses key on."""
+        per_class: dict[str, int] = {}
+        for _, ci, _ in batch:
+            name = self._classes[ci].name
+            per_class[name] = per_class.get(name, 0) + 1
+        self.admission_log.append({
+            "t": now, "n": len(batch), "chunk": self._chunk,
+            "expired": n_expired, "per_class": per_class,
+            # live counts, not queue lengths: lazily-invalidated entries
+            # must not make an idle class look contended
+            "backlog": {c.name: self._cls_backlog[i]
+                        for i, c in enumerate(self._classes)},
+        })
+
+    def _admit_flush(self, rounds: list, now: float) -> None:
+        """Dispatch a whole flush — the concatenated scheduling rounds,
+        each ``[(key, class idx, submit time), ...]`` — as one planner
+        batch through the service's lane machinery at the current chunk
+        width, keeping at most ``async_depth`` chunks un-synced in
+        flight.  Row order is round order, so the weighted schedule
+        decides intra-lane dispatch (and thus resolution) order."""
         svc = self.service
+        batch = [entry for b, _ in rounds for entry in b]
+        cu = np.fromiter((k[0][0] for k in batch), np.int32, len(batch))
+        cv = np.fromiter((k[0][1] for k in batch), np.int32, len(batch))
+        cls = np.fromiter((k[1] for k in batch), np.int16, len(batch))
+        plan = plan_from_pairs(cu, cv, self.index._is_landmark_np, cls=cls)
         self.stats["admissions"] += 1
         self.stats["admitted_pairs"] += plan.n_unique
+        if any(n_expired for _, n_expired in rounds):
+            self.stats["deadline_flushes"] += 1
+        # per-class accounting reads the *plan's* class tags — the thing
+        # the lanes actually dispatch — so a planner cls-propagation bug
+        # surfaces here (waits still need the submit times from batch)
+        for (_, _, t_enq), ci in zip(batch, plan.cls.tolist()):
+            cstat = self.qos_stats[self._classes[ci].name]
+            cstat["admitted"] += 1
+            cstat["waits"].append(now - t_enq)
         for k in range(1, N_LANES):
             svc.lane_served[k] += int(plan.lanes[k].size)
         for sel, live, dispatch in svc._chunks(plan, chunk=self._chunk):
@@ -293,6 +573,43 @@ class StreamingService:
             self.stats["chunks"] += 1
             self.stats["padded_rows"] += sel.shape[0] - live
             self._sync_until(svc.async_depth - 1)
+
+    # -- deadline timer ------------------------------------------------------
+
+    def _earliest_deadline(self) -> float | None:
+        heap = self._heap
+        while heap and self._deadline.get(heap[0][2]) != heap[0][0]:
+            heapq.heappop(heap)                   # drop stale entries
+        return heap[0][0] if heap else None
+
+    def _arm_timer(self) -> None:
+        due = self._earliest_deadline()
+        if due == self._armed_for:
+            return
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        self._armed_for = due
+        if due is not None:
+            # the token identifies THIS arming: a SystemClock timer that
+            # already fired and is waiting on the lock while another
+            # thread re-arms must not clobber the newer timer's tracking
+            token = object()
+            self._timer_token = token
+            self._timer = self.clock.call_at(
+                due, lambda: self._on_timer(token))
+
+    def _on_timer(self, token) -> None:
+        with self._lock:
+            if token is self._timer_token:
+                self._timer = None
+                self._armed_for = None
+                self._timer_token = None
+            # stale fires still pump: the wakeup is an idempotent poll
+            self._pump()
+            self._arm_timer()
+
+    # -- resolution ----------------------------------------------------------
 
     def _sync_until(self, limit: int) -> None:
         while len(self._inflight) > limit:
@@ -307,8 +624,8 @@ class StreamingService:
                 d_top = d_top_of(int(plan.lane[row]), dist, INF)
                 for fut in self._waiting.pop(key):
                     fut._resolve(dist, eids, d_top)
-                if self.service.cache is not None:
-                    self.service.cache.put(key, (dist, eids))
+                self._deadline.pop(key, None)
+                self.service.cache_put(key, (dist, eids))
 
     def _lane_of(self, key: tuple[int, int]) -> int:
         """Scalar lane classification for submit-time (cache-hit)

@@ -66,6 +66,31 @@ def oracle_query_batch(graph, us, vs) -> list[tuple[int, np.ndarray]]:
     return [oracle_spg(graph, int(u), int(v)) for u, v in zip(us, vs)]
 
 
+class OracleCache:
+    """Memoized ``oracle_spg`` over one graph, keyed on the canonical
+    pair.  Randomized serving traces are duplicate-heavy by design (the
+    dedup/join paths are what they fuzz), so the property harness checks
+    every future against this instead of re-running two BFSs per
+    duplicate."""
+
+    def __init__(self, graph):
+        self.graph = graph
+        self._memo: dict[tuple[int, int], tuple[int, np.ndarray]] = {}
+
+    def spg(self, u: int, v: int) -> tuple[int, np.ndarray]:
+        key = (min(u, v), max(u, v))
+        got = self._memo.get(key)
+        if got is None:
+            got = self._memo[key] = oracle_spg(self.graph, u, v)
+        return got
+
+    def assert_result(self, res) -> None:
+        """One SPGResult (orientation-preserving) vs the oracle."""
+        d, eids = self.spg(res.u, res.v)
+        assert res.dist == d, (res.u, res.v, res.dist, d)
+        assert np.array_equal(np.asarray(res.edge_ids), eids), (res.u, res.v)
+
+
 def assert_bit_identical(graph, results, us, vs) -> None:
     """Assert a list of SPGResults matches the oracle bit-for-bit on
     (u, v, dist, edge_ids)."""

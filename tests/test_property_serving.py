@@ -1,0 +1,198 @@
+"""Property-based serving fuzz harness (DESIGN.md §8).
+
+The serving policy surface is now a product space — admission (fixed /
+adaptive widths) x QoS (classes, weights, deadlines) x cache (off / lru /
+hub eviction, all / reuse admission) x async depth x duplicate joins x
+interleaved drains/polls/clock jumps — far too many corners for
+example-based tests.  This harness drives *randomized arrival traces*
+through ``StreamingService`` on randomized small graphs and checks, for
+every configuration drawn:
+
+* **bit-identity**: every resolved future matches the pure-numpy serving
+  oracle (``tests/helpers/serving_oracle.py``) on ``(dist, edge_ids)``;
+* **future resolution**: after the final drain nothing is pending or in
+  flight and every future is done; duplicates of one canonical pair
+  resolved identically;
+* **no starvation / deadline bound**: every recorded admission wait of a
+  deadline class is ``<= max_wait`` — in *simulated* time through the
+  injected ``ManualClock``, so the whole suite runs without a single
+  wall-clock sleep;
+* **accounting**: submitted == trivial + cache hits + joins + admitted
+  unique pairs, and the service's lane counters agree.
+
+Two drivers share one trace generator: a deterministic seed sweep that
+always runs in tier-1 (>= 50 examples, hypothesis not required), and a
+hypothesis ``@given`` wrapper that explores/shrinks the same space when
+hypothesis is installed (examples budget scales via
+``QBS_PROPERTY_EXAMPLES_SCALE`` — bumped in the nightly CI job).
+
+Graphs are padded to fixed ``(V, E)`` buckets so examples reuse jit cache
+entries, and index builds are memoized per graph seed.
+"""
+import functools
+import os
+
+import numpy as np
+import pytest
+
+from helpers.serving_oracle import OracleCache
+
+from repro.core import QbSIndex, from_edges
+from repro.serving import AdmissionPolicy, ManualClock, QoSClass, StreamingService
+
+V_BUCKET = 32
+E_BUCKET = 256          # directed slots
+N_GRAPH_SEEDS = 6       # distinct (graph, index) builds, memoized
+_SCALE = max(1, int(os.environ.get("QBS_PROPERTY_EXAMPLES_SCALE", "1")))
+
+# the whole policy-surface catalog the fuzzer draws from; chunk widths
+# stay on a tiny ladder so every (index, width) lane compiles once
+QOS_CONFIGS = (
+    None,                                                    # legacy default
+    (QoSClass("interactive", max_wait=0.02, weight=4.0),
+     QoSClass("batch", max_wait=None, weight=1.0)),
+    (QoSClass("now", max_wait=0.0, weight=1.0),
+     QoSClass("soon", max_wait=0.05, weight=2.0),
+     QoSClass("whenever", max_wait=0.5, weight=0.5)),
+    (QoSClass("a", max_wait=0.01, weight=1.0),
+     QoSClass("b", max_wait=0.01, weight=1.0)),
+)
+POLICIES = (
+    AdmissionPolicy(adaptive=True, min_chunk=2, max_chunk=8),
+    AdmissionPolicy(adaptive=False, chunk=4, min_chunk=2, max_chunk=8),
+    AdmissionPolicy(adaptive=True, chunk=2, min_chunk=2, max_chunk=4),
+)
+CACHES = (
+    {},
+    {"cache_size": 8},
+    {"cache_size": 8, "cache_policy": "hub"},
+    {"cache_size": 8, "cache_admission": "reuse"},
+    {"cache_size": 8, "cache_policy": "hub", "cache_admission": "reuse"},
+)
+DTS = (0.0, 0.005, 0.02, 0.1, 0.6)
+
+
+@functools.lru_cache(maxsize=None)
+def _built(graph_seed: int):
+    """(graph, index) for one fuzz graph seed — memoized because the
+    index build (and its per-index jit cache) dominates example cost."""
+    rng = np.random.default_rng(1000 + graph_seed)
+    n = int(rng.integers(8, V_BUCKET))
+    m = int(rng.integers(n, 2 * n))
+    edges = rng.integers(0, n, size=(m, 2))
+    g = from_edges(edges, n, pad_vertices_to=V_BUCKET, pad_edges_to=E_BUCKET)
+    deg = np.asarray(g.degrees())[:n]
+    nl = int(rng.integers(1, 5))
+    landmarks = np.sort(np.argsort(-deg)[:nl]).astype(np.int32)
+    return g, n, QbSIndex.build(g, landmarks=landmarks, chunk=4)
+
+
+def _run_trace(seed: int, n_ops: int = 24) -> None:
+    """One fuzz example: draw a config + arrival trace from ``seed``, run
+    it, assert every invariant.  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    g, n, idx = _built(int(rng.integers(N_GRAPH_SEEDS)))
+    qos = QOS_CONFIGS[int(rng.integers(len(QOS_CONFIGS)))]
+    clk = ManualClock()
+    st = StreamingService(
+        idx, policy=POLICIES[int(rng.integers(len(POLICIES)))],
+        qos=qos, clock=clk,
+        async_depth=int(rng.integers(1, 3)),
+        **CACHES[int(rng.integers(len(CACHES)))])
+    names = [c.name for c in st.qos_classes]
+    max_wait = {c.name: c.max_wait for c in st.qos_classes}
+
+    futs: list = []
+    recent: list[tuple[int, int]] = []
+
+    def draw_pair():
+        if recent and rng.random() < 0.3:       # duplicate (maybe swapped)
+            u, v = recent[int(rng.integers(len(recent)))]
+            return (v, u) if rng.random() < 0.5 else (u, v)
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        recent.append((u, v))
+        return u, v
+
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.45:
+            u, v = draw_pair()
+            futs.append(st.submit(u, v, qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.60:
+            pairs = [draw_pair() for _ in range(int(rng.integers(2, 7)))]
+            futs.extend(st.submit_batch(
+                [p[0] for p in pairs], [p[1] for p in pairs],
+                qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.80:
+            clk.advance(DTS[int(rng.integers(len(DTS)))])
+        elif r < 0.88:
+            st.drain()
+        elif r < 0.95:
+            st.poll()
+        elif futs:
+            f = futs[int(rng.integers(len(futs)))]
+            f.result()                          # implicit drain; idempotent
+            assert f.done()
+    st.drain()
+
+    # future resolution: everything resolved, nothing left anywhere
+    assert st.n_pending == 0 and st.n_inflight == 0
+    assert not st._waiting and not st._pending and not st._deadline
+    assert all(f.done() for f in futs)
+
+    # bit-identity vs the numpy oracle, every future, original orientation
+    oracle = OracleCache(g)
+    by_key: dict[tuple[int, int], list] = {}
+    for f in futs:
+        res = f.result()
+        oracle.assert_result(res)
+        by_key.setdefault((min(f.u, f.v), max(f.u, f.v)), []).append(res)
+    # duplicates of a canonical pair resolved identically
+    for group in by_key.values():
+        for r in group[1:]:
+            assert r.dist == group[0].dist
+            assert np.array_equal(r.edge_ids, group[0].edge_ids)
+
+    # no starvation: admission waits never exceed the class deadline
+    # (simulated clock: deadline fires stamp the admission *at* the bound)
+    for name in names:
+        mw = max_wait[name]
+        waits = st.qos_stats[name]["waits"]
+        assert all(w >= 0 for w in waits)
+        if mw is not None:
+            assert all(w <= mw + 1e-9 for w in waits), (name, mw, max(waits))
+
+    # accounting: every submission resolved through exactly one path
+    s = st.stats
+    fresh = s["submitted"] - s["trivial"] - s["cache_hits"] - s["joined"]
+    assert s["admitted_pairs"] == fresh
+    assert sum(st.qos_stats[nm]["admitted"] for nm in names) == fresh
+    assert sum(st.service.lane_served) == \
+        s["trivial"] + s["cache_hits"] + s["admitted_pairs"]
+    assert len(futs) == s["submitted"]
+
+
+# -- tier-1 driver: deterministic, >= 50 examples, no hypothesis needed ------
+
+
+@pytest.mark.parametrize("seed", range(56 * _SCALE))
+def test_streaming_trace_properties(seed):
+    _run_trace(seed)
+
+
+# -- hypothesis driver: explores/shrinks the same space ----------------------
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                             # container without the extra:
+    _HAVE_HYPOTHESIS = False                    # the sweep above still runs
+
+
+if _HAVE_HYPOTHESIS:
+
+    @given(seed=hyp_st.integers(min_value=0, max_value=2**31 - 1),
+           n_ops=hyp_st.integers(min_value=1, max_value=40))
+    @settings(max_examples=25 * _SCALE, deadline=None)
+    def test_streaming_trace_properties_hypothesis(seed, n_ops):
+        _run_trace(seed, n_ops=n_ops)

@@ -1,0 +1,283 @@
+"""Deadline- and QoS-aware streaming scheduler (DESIGN.md §8): wall-clock
+admission deadlines through the injectable clock (no sleeps anywhere),
+deficit-weighted class shares under flood, cache admission, and every
+deadline edge case the ISSUE pins (max_wait=0, in-flight duplicate join,
+empty-backlog timer wakeup, shard rounding on a 1-device mesh)."""
+import numpy as np
+import pytest
+
+from helpers.serving_oracle import assert_bit_identical, oracle_spg
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import (
+    AdmissionPolicy,
+    ManualClock,
+    QoSClass,
+    ServingService,
+    StreamingService,
+)
+
+WIDE = AdmissionPolicy(adaptive=False, chunk=64)   # never size-triggers
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gnp_random_graph(40, 3.0, seed=23)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return QbSIndex.build(graph, n_landmarks=4, chunk=8)
+
+
+def _stream(index, **kw):
+    kw.setdefault("clock", ManualClock())
+    return StreamingService(index, **kw)
+
+
+def _non(index, k):
+    return int(np.flatnonzero(~index._is_landmark_np)[k])
+
+
+# -- the regression the deadline timer exists for ----------------------------
+
+
+def test_lone_backlog_query_bounded_by_deadline(index):
+    """A query sitting alone in the backlog must not wait forever when no
+    further traffic arrives: the deadline timer admits *and resolves* it
+    with zero driver calls after submit."""
+    clk = ManualClock()
+    st = _stream(index, clock=clk, policy=WIDE,
+                 qos=(QoSClass("interactive", max_wait=0.05, weight=1.0),))
+    fut = st.submit(_non(index, 0), _non(index, 1), qos="interactive")
+    assert not fut.done() and st.n_pending == 1
+    clk.advance(0.04)                       # before the deadline: still queued
+    assert not fut.done() and st.n_pending == 1
+    clk.advance(0.02)                       # past it: timer fires, no drain
+    assert fut.done() and st.n_pending == 0 and st.n_inflight == 0
+    d, eids = oracle_spg(index.graph, fut.u, fut.v)
+    assert fut.result().dist == d
+    assert np.array_equal(fut.result().edge_ids, eids)
+    assert st.stats["deadline_flushes"] == 1
+    w = st.qos_stats["interactive"]["waits"]
+    assert len(w) == 1 and abs(w[0] - 0.05) < 1e-9   # admitted *at* the bound
+
+
+def test_max_wait_zero_flushes_at_submit(index):
+    """max_wait=0: the deadline is already due at submit, so the pair
+    dispatches and resolves inline — no clock movement needed."""
+    st = _stream(index, policy=WIDE,
+                 qos=(QoSClass("now", max_wait=0.0),))
+    fut = st.submit(_non(index, 2), _non(index, 3), qos="now")
+    assert fut.done() and st.n_pending == 0 and st.n_inflight == 0
+    d, _ = oracle_spg(index.graph, fut.u, fut.v)
+    assert fut.result().dist == d
+
+
+def test_deadline_fires_on_inflight_duplicate_join(index):
+    """A tighter-deadline duplicate joining a pair already *in flight*
+    (admitted, un-synced in the async window) arms the timer; the fire
+    syncs the window so the joined future resolves within its bound."""
+    clk = ManualClock()
+    st = _stream(index, clock=clk,
+                 policy=AdmissionPolicy(adaptive=False, chunk=2, min_chunk=2),
+                 async_depth=4,
+                 qos=(QoSClass("batch"),
+                      QoSClass("interactive", max_wait=0.05, weight=4.0)))
+    u, v = _non(index, 4), _non(index, 5)
+    a = st.submit(u, v, qos="batch")
+    b = st.submit(_non(index, 6), _non(index, 7), qos="batch")
+    # size trigger fired (chunk=2) but async_depth=4 keeps both un-synced
+    assert st.n_pending == 0 and st.n_inflight > 0
+    assert not a.done()
+    dup = st.submit(v, u, qos="interactive")     # joins the in-flight pair
+    assert st.stats["joined"] == 1 and not dup.done()
+    clk.advance(0.06)                            # deadline: sync, no drain
+    assert dup.done() and a.done() and b.done()
+    assert dup.result().dist == a.result().dist
+    assert dup.result().edge_ids is a.result().edge_ids
+
+
+def test_empty_backlog_timer_wakeup_is_noop(index):
+    """Timer wakeups racing a drain (or plain polls on an idle service)
+    must be no-ops: the deadline state is already clean."""
+    clk = ManualClock()
+    st = _stream(index, clock=clk, policy=WIDE,
+                 qos=(QoSClass("interactive", max_wait=0.05),))
+    st.poll()                                    # idle poll: nothing due
+    fut = st.submit(_non(index, 0), _non(index, 2), qos="interactive")
+    st.drain()                                   # resolves before the deadline
+    assert fut.done()
+    clk.advance(1.0)                             # stale wakeup window passes
+    st.poll()
+    assert st.n_pending == 0 and st.n_inflight == 0
+    assert st.stats["deadline_flushes"] == 0
+    # waits were recorded at the (early) drain, not the deadline
+    w = st.qos_stats["interactive"]["waits"]
+    assert len(w) == 1 and w[0] < 0.05
+
+
+def test_deadline_with_shard_rounding_one_device_mesh(graph):
+    """Deadline flushes through a sharded (1-device mesh) service: the
+    round's width re-rounds to the shard multiple and the timer-admitted
+    answers stay bit-identical to the oracle."""
+    idx = QbSIndex.build(graph, n_landmarks=4, chunk=8)
+    clk = ManualClock()
+    st = StreamingService(idx, devices=1, clock=clk,
+                          policy=AdmissionPolicy(min_chunk=2, max_chunk=16),
+                          qos=(QoSClass("interactive", max_wait=0.01),))
+    non = np.flatnonzero(~idx._is_landmark_np)
+    us = non[:3].astype(np.int32)
+    vs = non[3:6].astype(np.int32)
+    futs = st.submit_batch(us, vs, qos="interactive")
+    assert st.n_pending == 3                     # below every size trigger
+    clk.advance(0.02)
+    assert all(f.done() for f in futs)
+    assert_bit_identical(idx.graph, [f.result() for f in futs], us, vs)
+
+
+def test_system_clock_timer_admits_lone_query(index):
+    """Smoke the production clock path once: a real threading.Timer fires
+    the deadline admission with zero driver calls (the only wall-clock
+    wait in the scheduler suite, bounded at a 10ms deadline)."""
+    import time
+
+    st = StreamingService(index, policy=WIDE,
+                          qos=(QoSClass("interactive", max_wait=0.01),))
+    fut = st.submit(_non(index, 0), _non(index, 1), qos="interactive")
+    deadline = time.monotonic() + 10.0
+    while not fut.done() and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert fut.done(), "SystemClock deadline timer never admitted the query"
+    d, _ = oracle_spg(index.graph, fut.u, fut.v)
+    assert fut.result().dist == d
+
+
+# -- deficit-weighted fairness ----------------------------------------------
+
+
+def test_weighted_shares_under_flood(index):
+    """A round both classes are slot-limited in splits its chunk by
+    weight (3:1 here), so the flooding tenant cannot starve the
+    interactive one — and the flood still gets its own share."""
+    st = _stream(index, policy=AdmissionPolicy(adaptive=False, chunk=8),
+                 qos=(QoSClass("interactive", max_wait=1.0, weight=3.0),
+                      QoSClass("bulk", max_wait=None, weight=1.0)))
+    # interactive banks just under the trigger (7 < 8), then a deep bulk
+    # burst crosses it: the flush's first round is oversubscribed on both
+    # sides, so its slot split is pure weights.  All canonical pairs are
+    # distinct by construction so no join blurs the admitted counts.
+    iu = np.arange(7, dtype=np.int32)
+    iv = iu + 20
+    bu = np.concatenate([np.arange(20), np.arange(20)]).astype(np.int32)
+    bv = np.concatenate([np.arange(20) + 19, np.arange(20) + 18]).astype(np.int32)
+    assert len({(min(u, v), max(u, v))
+                for u, v in zip(np.r_[iu, bu], np.r_[iv, bv])}) == 47
+    st.submit_batch(iu, iv, qos="interactive")
+    assert st.n_pending == 7                   # below the size trigger
+    st.submit_batch(bu, bv, qos="bulk")        # crossing flushes everything
+    assert st.n_pending == 0                   # work-conserving
+    contended = [r for r in st.admission_log
+                 if all(r["backlog"].get(c, 0) > 0   # post-round leftovers
+                        for c in ("interactive", "bulk"))]
+    assert contended, "flood never produced a slot-contended round"
+    for r in contended:
+        # 3:1 over 8 slots -> 6/2, give or take the deficit carry
+        assert r["per_class"].get("interactive", 0) >= 4
+        assert r["per_class"].get("bulk", 0) >= 1
+    st.drain()
+    assert st.qos_stats["bulk"]["admitted"] == 40
+    assert st.qos_stats["interactive"]["admitted"] == 7
+    assert st.n_pending == 0 and st.n_inflight == 0
+
+
+def test_single_class_defaults_match_legacy_admission(index):
+    """No qos= config: one default class, no deadlines, FIFO slots — the
+    scheduler degenerates to the pre-QoS admission layer."""
+    st = _stream(index, policy=AdmissionPolicy(adaptive=False, chunk=4))
+    assert st.qos_classes == (QoSClass("default"),)
+    non = np.flatnonzero(~index._is_landmark_np)
+    futs = st.submit_batch(non[:4], non[1:5])
+    assert all(f.done() or st.n_inflight for f in futs)
+    st.drain()
+    assert_bit_identical(index.graph, [f.result() for f in futs],
+                         non[:4], non[1:5])
+    assert st.stats["deadline_flushes"] == 0
+    assert st.qos_stats["default"]["admitted"] == st.stats["admitted_pairs"]
+
+
+def test_planner_class_tags_propagate(index):
+    """QoS class tags ride the plan: plan_from_pairs keeps them verbatim,
+    merge_plans dedups with first-appearance-wins (the class that got a
+    pair admitted keeps it), untagged plans contribute class 0."""
+    from repro.serving import merge_plans, plan_from_pairs, plan_queries
+
+    is_l = index._is_landmark_np
+    non = np.flatnonzero(~is_l)
+    cu = non[:3].astype(np.int32)
+    cv = non[3:6].astype(np.int32)
+    plan = plan_from_pairs(np.minimum(cu, cv), np.maximum(cu, cv), is_l,
+                           cls=[1, 0, 2])
+    assert np.array_equal(plan.cls, [1, 0, 2])
+    assert plan_from_pairs(cu[:1], cv[:1], is_l).cls is None
+    other = plan_from_pairs(np.minimum(cu[:1], cv[:1]),
+                            np.maximum(cu[:1], cv[:1]), is_l, cls=[2])
+    merged = merge_plans([plan, other], is_l)     # pair 0 deduped across
+    assert merged.n_unique == 3
+    assert np.array_equal(merged.cls, [1, 0, 2])  # first appearance won
+    untagged = plan_queries(cu[:1], cv[:1], is_l)
+    merged = merge_plans([untagged, plan], is_l)
+    assert merged.n_unique == 3               # pair 0 deduped again
+    assert np.array_equal(merged.cls, [0, 0, 2])  # untagged first: class 0
+
+
+def test_qos_validation(index):
+    with pytest.raises(ValueError):
+        QoSClass("bad", weight=0.0)
+    with pytest.raises(ValueError):
+        QoSClass("bad", max_wait=-1.0)
+    with pytest.raises(ValueError):
+        _stream(index, qos=(QoSClass("a"), QoSClass("a")))
+    st = _stream(index)
+    with pytest.raises(ValueError, match="unknown qos class"):
+        st.submit(1, 2, qos="nope")
+
+
+# -- cache admission ---------------------------------------------------------
+
+
+def test_cache_admission_reuse_skips_one_shot_pairs(index):
+    """cache_admission="reuse": a computed cold pair is not inserted on
+    first sighting (predicted one-shot), is on its second; hub/landmark
+    pairs insert immediately (Graph.hub_mask skew)."""
+    lms = np.asarray(index.scheme.landmarks)
+    non = np.flatnonzero(~index._is_landmark_np)
+    st = _stream(index, cache_size=16, cache_admission="reuse")
+    cache = st.service.cache
+    cold = (int(non[0]), int(non[1]))
+    st.submit(*cold)
+    st.drain()
+    assert cold not in cache                    # first sighting: refused
+    st.submit(*cold)
+    st.drain()
+    assert cold in cache                        # second compute: admitted
+    before = st.stats["cache_hits"]
+    st.submit(*cold)
+    st.drain()
+    assert st.stats["cache_hits"] == before + 1
+    hot = (int(lms[0]), int(non[2]))            # landmark endpoint
+    st.submit(*hot)
+    st.drain()
+    assert (min(hot), max(hot)) in cache        # hub skew: admitted at once
+
+    with pytest.raises(ValueError):
+        ServingService(index, cache_size=4, cache_admission="nope")
+
+
+def test_cache_admission_all_is_seed_behavior(index):
+    non = np.flatnonzero(~index._is_landmark_np)
+    st = _stream(index, cache_size=16)          # default cache_admission
+    cold = (int(non[3]), int(non[4]))
+    st.submit(*cold)
+    st.drain()
+    assert cold in st.service.cache
