@@ -60,7 +60,10 @@ def run(scale: float = 1.0, n_hubs: int = 512, **_) -> list[tuple]:
             "hybrid": make_relay(g, backend="hybrid",
                                  n_hubs=min(n_hubs, g.n_vertices // 4)),
         }
-        fns = {name: jax.jit(e.relay) for name, e in engines.items()}
+        # one jit per fresh engine/graph — shapes change every iteration,
+        # so per-loop construction is the point, not recompile churn
+        fns = {name: jax.jit(e.relay)  # qbslint: disable=QBS004
+               for name, e in engines.items()}
         for k in WIDTHS:
             vals = jnp.asarray(rng.random((k, g.n_vertices)) < 0.1)
             best = _time_interleaved(fns, vals)

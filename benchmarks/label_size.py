@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax.numpy as jnp
 
 from repro.core import INF, build_labelling, labelling_size_bytes, select_landmarks
 from repro.core.baselines import PPLIndex

@@ -20,7 +20,6 @@ import argparse
 import json
 from pathlib import Path
 
-import numpy as np
 
 PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
 HBM_BW = 819e9            # B/s / chip

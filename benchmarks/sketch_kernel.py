@@ -12,7 +12,6 @@ import jax.numpy as jnp
 
 from repro.core import INF, d_top_only
 from repro.kernels import minplus as minplus_pallas
-from repro.kernels.ref import minplus_ref
 
 from .common import emit, time_call
 

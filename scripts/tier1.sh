@@ -6,4 +6,9 @@
 # unless the diff broke something.  Extra args are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# run the whole suite under the serving concurrency sanitizer
+# (serving/debug.py): guarded containers + owner-tracked lock turn any
+# off-lock scheduler mutation into a hard failure.  Opt out per-run with
+# QBS_SANITIZE=0.
+export QBS_SANITIZE="${QBS_SANITIZE:-1}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" "$@"

@@ -18,7 +18,7 @@ sequential because pruning depends on all previous labels.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +61,17 @@ def bfs_spg(graph: Graph, u: int, v: int, max_levels: int = 256,
 # ---------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=8)
+def _bibfs_search_step(n_vertices: int, max_levels: int):
+    """One jitted, vmapped degenerate search per (V, max_levels).  The
+    search context rides in as a pytree argument, so every same-sized
+    graph/backend shares this entry; constructing ``jax.jit`` inside
+    ``bibfs_spg_batch`` instead would recompile on every call (QBS004)."""
+    search = partial(guided_search, n_vertices=n_vertices,
+                     max_levels=max_levels, max_chain=1)
+    return jax.jit(jax.vmap(search, in_axes=(None, 0)))
+
+
 def bibfs_spg_batch(graph: Graph, us, vs, max_levels: int = 512,
                     backend: str = "segment") -> list[SPGResult]:
     us = np.asarray(us, np.int32).reshape(-1)
@@ -77,9 +88,8 @@ def bibfs_spg_batch(graph: Graph, us, vs, max_levels: int = 512,
         meta_edge=jnp.zeros((b, 1, 1), bool),
         d_star_u=jnp.full((b,), zero), d_star_v=jnp.full((b,), zero),
     )
-    search = partial(guided_search, n_vertices=graph.n_vertices,
-                     max_levels=max_levels, max_chain=1)
-    res = jax.jit(jax.vmap(search, in_axes=(None, 0)))(ctx, queries)
+    step = _bibfs_search_step(graph.n_vertices, max_levels)
+    res = step(ctx, queries)
     rev = _reverse_edge_map(np.asarray(graph.src), np.asarray(graph.dst), graph.n_vertices)
     mask = np.asarray(res.edge_mask)
     mask = mask | mask[:, rev]

@@ -25,7 +25,6 @@ the dry-run lowers it at paper scale.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,7 @@ from ..compat import shard_map
 from .frontier import segment_or
 from .graph import INF, Graph
 from .labelling import LabellingScheme
-from .distributed import EdgePartition, _pack_bits, partition_edges
+from .distributed import _pack_bits, partition_edges
 from .sketch import compute_sketch_batch
 
 INF16 = np.int16(30_000)

@@ -144,7 +144,7 @@ def _lower_lm_once(cfg, shape, mesh, *, remat: bool = False,
     p_sh = _shard_tree(mesh, pspec)
 
     specs = input_specs(cfg, shape, kv_quant=kv_quant)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if shape.kind == "train":
         opt = adamw(warmup_cosine(3e-4, 2000, 100_000))
@@ -213,9 +213,9 @@ def _lower_lm_once(cfg, shape, mesh, *, remat: bool = False,
                            jax.ShapeDtypeStruct((), jnp.int32),
                            specs["tokens"])
 
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     stats = summarize_compiled(lowered, compiled)
     stats.update({
         "lower_s": round(t1 - t0, 2),
@@ -259,7 +259,7 @@ def lower_qbs_labelling_cell(graph_name: str, mesh, *, frontier_mode="bitmap") -
     vloc = math.ceil(g.n_vertices / n_shards)
     emax = math.ceil(g.n_edge_slots / n_shards)
     i32 = jnp.int32
-    t0 = time.time()
+    t0 = time.perf_counter()
     if frontier_mode == "pull":
         # plan sizes from the uniform-spread estimate: each shard's edge
         # sources distribute ~evenly over owners
@@ -289,9 +289,9 @@ def lower_qbs_labelling_cell(graph_name: str, mesh, *, frontier_mode="bitmap") -
             jax.ShapeDtypeStruct((n_shards,), i32),
             jax.ShapeDtypeStruct((g.n_landmarks,), i32),
         )
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     stats = summarize_compiled(lowered, compiled)
     stats.update({
         "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
@@ -310,8 +310,6 @@ def lower_qbs_serve_cell(graph_name: str, mesh, *, batch: int | None = None,
     core.scale_serve and is lowered by lower_qbs_scale_serve_cell."""
     from ..core.frontier import abstract_engine
     from ..core.search import SearchContext
-    from ..core.distributed import make_serve_step
-    from ..core.labelling import LabellingScheme
 
     g = GRAPHS[graph_name]
     v, e, r = g.n_vertices, g.n_edge_slots, g.n_landmarks
@@ -354,13 +352,13 @@ def lower_qbs_serve_cell(graph_name: str, mesh, *, batch: int | None = None,
     ctx_sh = jax.tree_util.tree_map(lambda _: rep, ctx)
     fn = jax.jit(step, in_shardings=(ctx_sh, rep, rep, rep, bsp, bsp),
                  out_shardings=(bsp, bsp))
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = fn.lower(ctx, scheme_label, meta, meta,
                        jax.ShapeDtypeStruct((batch,), i32),
                        jax.ShapeDtypeStruct((batch,), i32))
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     stats = summarize_compiled(lowered, compiled)
     stats.update({
         "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
@@ -384,7 +382,7 @@ def lower_qbs_scale_serve_cell(graph_name: str, mesh, *, batch: int = 32) -> dic
     emax = math.ceil(g.n_edge_slots / n_shards)
     r = g.n_landmarks
     i32, i16 = jnp.int32, jnp.int16
-    t0 = time.time()
+    t0 = time.perf_counter()
     step = make_scale_serve_step(
         mesh, n_vertices=g.n_vertices, v_loc=vloc, e_max=emax,
         n_landmarks=r, batch=batch, max_levels=16, max_chain=4)
@@ -400,9 +398,9 @@ def lower_qbs_scale_serve_cell(graph_name: str, mesh, *, batch: int = 32) -> dic
         jax.ShapeDtypeStruct((batch,), i32),
         jax.ShapeDtypeStruct((batch,), i32),
     )
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
     stats = summarize_compiled(lowered, compiled)
     stats.update({
         "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),

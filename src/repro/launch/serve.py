@@ -43,9 +43,9 @@ def main() -> None:
     g = build_graph(args.graph, args.n, args.seed)
     print(f"[serve] graph {args.graph}: V={g.n_vertices} E={g.n_edges // 2}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     idx = QbSIndex.build(g, n_landmarks=args.landmarks, chunk=args.chunk)
-    t1 = time.time()
+    t1 = time.perf_counter()
     sz = labelling_size_bytes(idx.scheme)
     print(f"[serve] labelling built in {t1 - t0:.2f}s; "
           f"size(L)={sz['label_bytes'] / 1e6:.2f}MB meta_edges={sz['n_meta_edges']}")
@@ -54,9 +54,9 @@ def main() -> None:
     us = rng.integers(0, g.n_vertices, size=args.queries)
     vs = rng.integers(0, g.n_vertices, size=args.queries)
 
-    t2 = time.time()
+    t2 = time.perf_counter()
     results = idx.query_batch(us, vs)
-    t3 = time.time()
+    t3 = time.perf_counter()
     dists = np.array([r.dist for r in results], dtype=np.int64)
     sizes = np.array([r.edge_ids.size for r in results])
     print(f"[serve] {args.queries} queries in {t3 - t2:.2f}s "

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import numpy as np
 
@@ -76,7 +75,7 @@ def main() -> None:
         compress=compress_bf16 if args.compress_grads else None))
 
     pending = None
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         for step in range(start_step, args.steps):
             got_step, batch = pf.next()
@@ -84,7 +83,7 @@ def main() -> None:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             if (step + 1) % args.log_every == 0 or step == start_step:
-                dt = (time.time() - t0) / max(step - start_step + 1, 1)
+                dt = (time.perf_counter() - t0) / max(step - start_step + 1, 1)
                 print(f"[train] step {step + 1} loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e} {dt * 1e3:.0f} ms/step",

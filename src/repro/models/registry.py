@@ -16,7 +16,6 @@ from jax.sharding import PartitionSpec as P
 
 from . import transformer as T
 from .config import ModelConfig, ShapeCell
-from .layers import dtype_of
 
 N_VLM_PATCHES = 256  # static patch-prefix length for the [vlm] stub frontend
 

@@ -17,8 +17,7 @@ recurrent caches), ``decode`` (one token against filled caches).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

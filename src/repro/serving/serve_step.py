@@ -21,14 +21,14 @@ dominate the roofline.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+from functools import lru_cache
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.registry import Model
+from ..models.registry import Model, build_model
 
 
 # ---------------------------------------------------------------------------
@@ -82,11 +82,23 @@ def make_decode_step(model: Model):
     return decode_step
 
 
+@lru_cache(maxsize=32)
+def _generate_steps(cfg):
+    """Jitted prefill/decode pair per ``ModelConfig`` (frozen, hashable).
+    The model facade is pure functions of the config, so rebuilding it
+    here yields the same computation — and caching on the config keeps
+    one jit (and one compile cache) per architecture instead of a fresh
+    one per ``greedy_generate`` call (QBS004 recompile churn)."""
+    model = build_model(cfg)
+    return jax.jit(model.prefill), jax.jit(make_decode_step(model))
+
+
 def greedy_generate(model: Model, params, prompt_tokens, n_new: int,
                     *, kv_quant: bool = False):
     """Host loop driver: prefill the prompt then decode n_new tokens."""
     b, s = prompt_tokens.shape
-    logits, pre_cache = jax.jit(model.prefill)(
+    prefill, decode = _generate_steps(model.cfg)
+    logits, pre_cache = prefill(
         params, batch={"tokens": jnp.asarray(prompt_tokens)})
     if model.cfg.family in ("ssm",):
         cache = pre_cache
@@ -124,7 +136,6 @@ def greedy_generate(model: Model, params, prompt_tokens, n_new: int,
         cache = {"layers": (k_buf, v_buf)}
         cache_len = jnp.int32(s)
 
-    decode = jax.jit(make_decode_step(model))
     out = [jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)]
     for i in range(n_new - 1):
         logits, cache = decode(params, cache, cache_len + i, out[-1][:, None])

@@ -61,6 +61,7 @@ import jax
 import numpy as np
 
 from ..core.graph import INF
+from . import debug
 from .clock import ManualClock, SystemClock  # noqa: F401  (re-export)
 from .planner import (
     LANE_GENERAL,
@@ -174,13 +175,33 @@ class StreamingService:
     cache admission, mesh) belongs to the inner service — pass its kwargs
     through (``cache_size=``, ``cache_policy=``, ``cache_admission=``,
     ``mesh=`` ...).
+
+    Lock discipline: every field named in ``_QBS_GUARDED_FIELDS`` is
+    mutated only under ``with self._lock`` — enforced statically by
+    qbslint rule QBS005 (internal helpers reached with the lock already
+    held carry ``# qbslint: locked``) and, when ``sanitize=True`` or
+    ``QBS_SANITIZE=1``, at runtime by ``serving.debug`` (guarded
+    containers + an owner-tracking lock that raise
+    ``ConcurrencyViolation`` on an off-lock mutation).
     """
+
+    _QBS_GUARDED_FIELDS = (
+        "_queues", "_cls_backlog", "_deficit", "_pending", "_n_pending",
+        "_deadline", "_heap", "_waiting", "_inflight", "_timer",
+        "_timer_token", "_armed_for", "_chunk", "stats", "qos_stats",
+        "admission_log",
+    )
 
     def __init__(self, index, *, policy: AdmissionPolicy | None = None,
                  qos: Sequence[QoSClass] | None = None, clock=None,
-                 service: ServingService | None = None, **service_kw):
+                 service: ServingService | None = None,
+                 sanitize: bool | None = None, **service_kw):
         if service is not None and service_kw:
             raise ValueError("pass either service= or service kwargs")
+        # arm the __setattr__ guard only once construction is done
+        object.__setattr__(self, "_qbs", None)
+        san = debug.sanitizer(sanitize)
+        box = san if san is not None else debug.PLAIN
         self.service = service or ServingService(index, **service_kw)
         self.index = self.service.index
         self.policy = policy or AdmissionPolicy()
@@ -195,27 +216,36 @@ class StreamingService:
         # per-class FIFO backlog of (key, seq); entries are lazily
         # invalidated (skipped) when the key's _pending seq moved on, so
         # _cls_backlog carries the exact live count per class
-        self._queues: list[deque] = [deque() for _ in self._classes]
-        self._cls_backlog = [0] * len(self._classes)
-        self._deficit = [0.0] * len(self._classes)
+        self._queues: list[deque] = [
+            box.deque(what=f"StreamingService._queues[{c.name}]")
+            for c in self._classes]
+        self._cls_backlog = box.list([0] * len(self._classes),
+                                     what="StreamingService._cls_backlog")
+        self._deficit = box.list([0.0] * len(self._classes),
+                                 what="StreamingService._deficit")
         # canonical key -> (class idx, submit time, seq) while *pending*
-        self._pending: dict[tuple[int, int], tuple[int, float, int]] = {}
+        self._pending: dict[tuple[int, int], tuple[int, float, int]] = \
+            box.dict(what="StreamingService._pending")
         self._n_pending = 0
         # canonical key -> earliest admission/resolution deadline while
         # the key is unresolved (pending or in flight); _heap holds
         # (deadline, seq, key) entries, stale ones dropped lazily
-        self._deadline: dict[tuple[int, int], float] = {}
-        self._heap: list[tuple[float, int, tuple[int, int]]] = []
+        self._deadline: dict[tuple[int, int], float] = \
+            box.dict(what="StreamingService._deadline")
+        self._heap: list[tuple[float, int, tuple[int, int]]] = \
+            box.list(what="StreamingService._heap")
         self._seq = itertools.count()
         self._timer = None
         self._timer_token = None
         self._armed_for: float | None = None
         # serializes submit/drain/poll against clock-thread deadline fires
-        self._lock = threading.RLock()
+        self._lock = san.lock if san is not None else threading.RLock()
         # canonical key -> [QueryFuture, ...]; present iff pending/in-flight
-        self._waiting: dict[tuple[int, int], list[QueryFuture]] = {}
-        self._inflight: deque = deque()          # (plan, sel, live, device out)
-        self.stats = {
+        self._waiting: dict[tuple[int, int], list[QueryFuture]] = \
+            box.dict(what="StreamingService._waiting")
+        self._inflight: deque = box.deque(
+            what="StreamingService._inflight")   # (plan, sel, live, dev out)
+        self.stats = box.dict({
             "submitted": 0,        # queries accepted
             "trivial": 0,          # resolved at submit (u == v)
             "cache_hits": 0,       # resolved at submit from the cache
@@ -226,33 +256,52 @@ class StreamingService:
             "chunks": 0,           # device chunks dispatched
             "padded_rows": 0,      # dead rows padded into those chunks
             "deadline_flushes": 0,  # flushes containing an expired pair
-        }
+        }, what="StreamingService.stats")
         # waits are wall-clock (injected-clock) seconds from submit to
         # admission — the queueing latency the deadline bounds; bounded
         # deques so a long-running service cannot grow host memory
-        self.qos_stats = {
-            c.name: {"submitted": 0, "trivial": 0, "cache_hits": 0,
-                     "joined": 0, "admitted": 0, "expired": 0,
-                     "waits": deque(maxlen=65536)}
-            for c in self._classes}
+        self.qos_stats = box.dict({
+            c.name: box.dict(
+                {"submitted": 0, "trivial": 0, "cache_hits": 0,
+                 "joined": 0, "admitted": 0, "expired": 0,
+                 "waits": box.deque(
+                     maxlen=65536,
+                     what=f"StreamingService.qos_stats[{c.name}].waits")},
+                what=f"StreamingService.qos_stats[{c.name}]")
+            for c in self._classes}, what="StreamingService.qos_stats")
         # one entry per admission round: composition + backlog snapshot
         # (the observability the fairness tests and benchmarks read)
-        self.admission_log: deque = deque(maxlen=4096)
+        self.admission_log: deque = box.deque(
+            maxlen=4096, what="StreamingService.admission_log")
+        # arm the runtime sanitizer's attribute guard (None when off)
+        self._qbs = san
+
+    def __setattr__(self, name, value):
+        # runtime half of QBS005 for plain-attribute rebinds (_chunk,
+        # _n_pending, the timer trio): guarded containers police their
+        # own mutators, this polices `self.<field> = ...`
+        qbs = self.__dict__.get("_qbs")
+        if qbs is not None and name in self._QBS_GUARDED_FIELDS:
+            qbs.assert_owned(f"StreamingService.{name}")
+        object.__setattr__(self, name, value)
 
     # -- introspection -------------------------------------------------------
 
     @property
     def chunk(self) -> int:
         """Current adaptive chunk width."""
-        return self._chunk
+        with self._lock:
+            return self._chunk
 
     @property
     def n_pending(self) -> int:
-        return self._n_pending
+        with self._lock:
+            return self._n_pending
 
     @property
     def n_inflight(self) -> int:
-        return len(self._inflight)
+        with self._lock:
+            return len(self._inflight)
 
     @property
     def qos_classes(self) -> tuple[QoSClass, ...]:
@@ -374,9 +423,27 @@ class StreamingService:
             self._pump()
             self._arm_timer()
 
+    def close(self) -> None:
+        """Drain outstanding work and disarm the deadline timer, so no
+        clock-thread callback outlives the service.  Idempotent, and the
+        service stays usable — a later ``submit`` re-arms the timer."""
+        self.drain()
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+            self._timer_token = None
+            self._armed_for = None
+
+    def __enter__(self) -> "StreamingService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- the scheduler -------------------------------------------------------
 
-    def _adapt_chunk(self, backlog: int) -> None:
+    def _adapt_chunk(self, backlog: int) -> None:  # qbslint: locked
         """Track the arrival rate: double while the backlog outruns the
         width, halve while it would fit in half of it."""
         if not self.policy.adaptive or backlog <= 0:
@@ -388,7 +455,7 @@ class StreamingService:
             c >>= 1
         self._chunk = c
 
-    def _pump(self, force: bool = False) -> None:
+    def _pump(self, force: bool = False) -> None:  # qbslint: locked
         """The admission loop.  Triggers: an expired deadline (flush the
         overdue pairs now, plus a weighted fill of the rest of the
         round), the size trigger (backlog reached the chunk width), or
@@ -424,7 +491,7 @@ class StreamingService:
         if (rounds and rounds[0][1]) or expired_inflight:
             self._sync_until(0)
 
-    def _pop_expired(self, now: float):
+    def _pop_expired(self, now: float):  # qbslint: locked
         """Pop every deadline due at ``now``.  Returns the expired
         *pending* entries (removed from the backlog, ready to admit) and
         whether any expired key is already in flight (its round must end
@@ -452,7 +519,7 @@ class StreamingService:
                 expired_inflight = True           # joined an in-flight pair
         return expired, expired_inflight
 
-    def _take_from(self, ci: int):
+    def _take_from(self, ci: int):  # qbslint: locked
         """Pop the oldest valid pending key of class ``ci`` (skipping
         entries invalidated by expiry-admission or re-submission), or
         None when the class backlog is empty."""
@@ -470,7 +537,7 @@ class StreamingService:
                 return (key, ci, ent[1])
         return None
 
-    def _drr_select(self, budget: int) -> list:
+    def _drr_select(self, budget: int) -> list:  # qbslint: locked
         """Deficit-weighted round-robin: split ``budget`` admission slots
         across the classes that have backlog, in proportion to their
         weights.  Fractional entitlements accumulate in per-class deficit
@@ -525,7 +592,7 @@ class StreamingService:
                 self._deficit[i] = 0.0
         return sel
 
-    def _log_round(self, batch: list, now: float, n_expired: int) -> None:
+    def _log_round(self, batch: list, now: float, n_expired: int) -> None:  # qbslint: locked
         """One admission_log entry per scheduling round, recorded at
         selection time so the backlog snapshot is the round's live
         leftover — the signal the fairness analyses key on."""
@@ -542,7 +609,7 @@ class StreamingService:
                         for i, c in enumerate(self._classes)},
         })
 
-    def _admit_flush(self, rounds: list, now: float) -> None:
+    def _admit_flush(self, rounds: list, now: float) -> None:  # qbslint: locked
         """Dispatch a whole flush — the concatenated scheduling rounds,
         each ``[(key, class idx, submit time), ...]`` — as one planner
         batch through the service's lane machinery at the current chunk
@@ -576,13 +643,13 @@ class StreamingService:
 
     # -- deadline timer ------------------------------------------------------
 
-    def _earliest_deadline(self) -> float | None:
+    def _earliest_deadline(self) -> float | None:  # qbslint: locked
         heap = self._heap
         while heap and self._deadline.get(heap[0][2]) != heap[0][0]:
             heapq.heappop(heap)                   # drop stale entries
         return heap[0][0] if heap else None
 
-    def _arm_timer(self) -> None:
+    def _arm_timer(self) -> None:  # qbslint: locked
         due = self._earliest_deadline()
         if due == self._armed_for:
             return
@@ -611,7 +678,7 @@ class StreamingService:
 
     # -- resolution ----------------------------------------------------------
 
-    def _sync_until(self, limit: int) -> None:
+    def _sync_until(self, limit: int) -> None:  # qbslint: locked
         while len(self._inflight) > limit:
             plan, sel, live, out = self._inflight.popleft()
             d, m = jax.device_get(out)

@@ -9,8 +9,7 @@ grads — 1/k the collective bytes of naive per-microbatch reduction).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,12 @@
+"""Fixture: wall-clock calls in serving code (QBS002)."""
+import threading
+import time
+from time import monotonic                  # QBS002
+from threading import Timer                 # QBS002
+
+
+def admit(backlog):
+    t0 = time.time()                        # QBS002
+    time.sleep(0.01)                        # QBS002
+    timer = threading.Timer(1.0, admit)     # QBS002
+    return t0, timer, monotonic, Timer

@@ -1,0 +1,14 @@
+"""Fixture: clock.py is the one serving file allowed to touch time."""
+import threading
+import time
+
+
+class SystemClock:
+    def now(self):
+        return time.monotonic()
+
+    def call_at(self, t, fn):
+        timer = threading.Timer(max(0.0, t - self.now()), fn)
+        timer.daemon = True
+        timer.start()
+        return timer

@@ -1,0 +1,25 @@
+"""Fixture: host syncs inside jitted bodies (QBS003)."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def decorated(x):
+    return x + int(x.sum())                 # QBS003 int() on traced value
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def partial_decorated(x, n):
+    y = np.asarray(x)                       # QBS003 np.asarray
+    return y.sum().item() + n               # QBS003 .item()
+
+
+def wrapped(x):
+    jax.device_get(x)                       # QBS003 (jit-wrapped below)
+    return x.block_until_ready()            # QBS003
+
+
+step = jax.jit(wrapped)
+lam = jax.jit(lambda x: float(x))           # QBS003 float() in jitted lambda

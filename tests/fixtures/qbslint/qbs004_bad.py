@@ -1,0 +1,18 @@
+"""Fixture: jit constructed off the setup path (QBS004)."""
+import jax
+
+
+def hot(xs):
+    fns = []
+    for x in xs:
+        fns.append(jax.jit(lambda a: a + x))    # QBS004 inside a loop
+    return fns
+
+
+class Service:
+    def step(self, fn, x):
+        return jax.jit(fn)(x)                   # QBS004 per-call body
+
+
+def make_step(fn):
+    return jax.jit(fn)                          # allowed: make_* factory

@@ -1,0 +1,27 @@
+"""Fixture: guarded-field mutations outside the lock (QBS005)."""
+import heapq
+import threading
+
+
+class Sched:
+    _QBS_GUARDED_FIELDS = ("_pending", "_heap", "stats")
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._pending = {}
+        self._heap = []
+        self.stats = {"n": 0}
+
+    def ok(self, key):
+        with self._lock:
+            self._pending[key] = 1              # guarded: fine
+            self.stats["n"] += 1
+
+    def bad(self, key):
+        self._pending[key] = 1                  # QBS005 write
+        self._pending.pop(key, None)            # QBS005 mutator call
+        heapq.heappush(self._heap, key)         # QBS005 heapq mutation
+        self.stats["n"] += 1                    # QBS005 write
+
+    def marked(self, key):                      # qbslint: locked
+        self._pending[key] = 1                  # fine: caller holds lock

@@ -1,0 +1,17 @@
+"""Fixture: ResultCache writes bypassing cache_put (QBS006)."""
+
+
+class Service:
+    def __init__(self, cache):
+        self.cache = cache
+
+    def cache_put(self, key, value):
+        self.cache.put(key, value)              # fine: the insertion path
+
+    def sneaky(self, key, value):
+        self.cache.put(key, value)              # QBS006 direct put
+        self.cache._store[key] = value          # QBS006 internals
+
+
+def loose(cache, key, value):
+    cache.put(key, value)                       # QBS006 direct put

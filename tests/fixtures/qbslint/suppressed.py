@@ -1,0 +1,13 @@
+"""Fixture: inline and file-wide suppressions silence findings."""
+# qbslint: disable-file=QBS001
+from jax.experimental.shard_map import shard_map    # file-wide suppressed
+
+import jax
+
+
+def caller(fn, x):
+    return jax.jit(fn)(x)  # qbslint: disable=QBS004
+
+
+def caller2(fn, x):
+    return jax.jit(shard_map(fn))  # qbslint: disable

@@ -1,0 +1,128 @@
+"""Clock/timer lifecycle (``serving.clock`` + the stream's deadline
+timer): drain/close must disarm SystemClock timers (no daemon timer
+outlives the service), and ManualClock handles stay safe to cancel
+after they have fired."""
+import threading
+import time
+
+import pytest
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import ManualClock, QoSClass, StreamingService
+from repro.serving.clock import SystemClock
+
+
+@pytest.fixture(scope="module")
+def index():
+    return QbSIndex.build(gnp_random_graph(40, 3.0, seed=5),
+                          n_landmarks=4, chunk=8)
+
+
+def _deadline_service(index, **kw):
+    # a long max_wait keeps the timer armed until we drain explicitly
+    return StreamingService(
+        index, qos=[QoSClass("default", max_wait=60.0)], **kw)
+
+
+def _timer_threads():
+    return [t for t in threading.enumerate()
+            if isinstance(t, threading.Timer) and t.is_alive()]
+
+
+def _settle(deadline=2.0):
+    """Give cancelled Timer threads a beat to wake up and exit."""
+    t0 = time.perf_counter()
+    while _timer_threads() and time.perf_counter() - t0 < deadline:
+        time.sleep(0.01)
+
+
+# ----------------------------------------------------------- SystemClock
+
+
+def test_drain_cancels_system_timer(index):
+    _settle()
+    before = len(_timer_threads())
+    svc = _deadline_service(index)
+    svc.submit(1, 7)
+    timer = svc._timer
+    assert timer is not None and timer.is_alive()
+    svc.drain()
+    assert svc._timer is None
+    assert timer.finished.is_set()            # cancel() reached the Timer
+    _settle()
+    assert len(_timer_threads()) <= before    # no leaked daemon timers
+
+
+def test_close_is_idempotent_and_service_reusable(index):
+    svc = _deadline_service(index)
+    svc.submit(2, 9)
+    svc.close()
+    assert svc._timer is None and svc._armed_for is None
+    svc.close()                               # idempotent
+    r = svc.submit(3, 8).result()             # still usable after close
+    assert r.dist >= 1
+    svc.close()
+    assert svc._timer is None
+
+
+def test_context_manager_disarms_on_exit(index):
+    with _deadline_service(index) as svc:
+        fut = svc.submit(4, 11)
+    assert fut.done()                         # __exit__ drained
+    assert svc._timer is None
+    _settle()
+
+
+def test_system_clock_cancel_before_fire():
+    clock = SystemClock()
+    fired = threading.Event()
+    timer = clock.call_at(clock.now() + 30.0, fired.set)
+    assert timer.daemon
+    timer.cancel()
+    _settle()
+    assert not fired.is_set()
+
+
+# ----------------------------------------------------------- ManualClock
+
+
+def test_manual_cancel_after_fire_is_noop():
+    clock = ManualClock()
+    fired = []
+    h = clock.call_at(1.0, lambda: fired.append(clock.now()))
+    clock.advance(2.0)
+    assert fired == [1.0]                     # fired at its instant
+    h.cancel()                                # after the fact: a no-op
+    clock.advance(5.0)
+    assert fired == [1.0]                     # and nothing re-fires
+
+
+def test_manual_cancel_before_fire_suppresses():
+    clock = ManualClock()
+    fired = []
+    h = clock.call_at(1.0, lambda: fired.append(1))
+    h.cancel()
+    clock.advance(10.0)
+    assert fired == []
+
+
+def test_manual_advance_fires_in_deadline_order():
+    clock = ManualClock()
+    order = []
+    clock.call_at(3.0, lambda: order.append(("b", clock.now())))
+    clock.call_at(1.0, lambda: order.append(("a", clock.now())))
+    clock.call_at(2.0, lambda: order.append(("m", clock.now())))
+    clock.advance_to(10.0)
+    assert order == [("a", 1.0), ("m", 2.0), ("b", 3.0)]
+    assert clock.now() == 10.0
+
+
+def test_stream_timer_with_manual_clock_disarms_on_drain(index):
+    clock = ManualClock()
+    svc = _deadline_service(index, clock=clock)
+    svc.submit(5, 12)
+    assert svc._timer is not None and not svc._timer.cancelled
+    svc.drain()
+    assert svc._timer is None                 # disarmed, handle dropped
+    clock.advance(120.0)                      # stale wakeups: none fire
+    assert svc.n_pending == 0 and svc.n_inflight == 0

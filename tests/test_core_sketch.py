@@ -5,7 +5,6 @@ import jax.numpy as jnp
 
 from repro.core import (
     INF,
-    QbSIndex,
     build_labelling,
     compute_sketch_batch,
     d_top_only,

@@ -12,7 +12,6 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (
-    INF,
     QbSIndex,
     barabasi_albert_graph,
     build_labelling,

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from helpers.serving_oracle import assert_bit_identical
 
-from repro.core import INF, QbSIndex, gnp_random_graph, grid_graph
+from repro.core import QbSIndex, gnp_random_graph, grid_graph
 from repro.core.baselines import bfs_spg
 from repro.serving import make_spg_serve_step, serve_spg_batch
 

@@ -1,0 +1,171 @@
+"""Runtime concurrency sanitizer (``serving.debug``): owner-tracked
+lock, guarded containers, StreamingService wiring (``sanitize=`` /
+``QBS_SANITIZE``), and a multi-threaded submit regression that runs the
+real scheduler under the sanitizer."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import ServingService, StreamingService
+from repro.serving.debug import (
+    ConcurrencyViolation,
+    GuardedDict,
+    OwnedRLock,
+    Sanitizer,
+    enabled,
+)
+
+
+@pytest.fixture(scope="module")
+def index():
+    return QbSIndex.build(gnp_random_graph(45, 3.2, seed=17),
+                          n_landmarks=5, chunk=8)
+
+
+# ------------------------------------------------------------ primitives
+
+
+def test_owned_rlock_tracks_owner_across_threads():
+    lock = OwnedRLock()
+    assert not lock.owned()
+    with lock:
+        assert lock.owned()
+        with lock:                       # reentrant: still owned
+            assert lock.owned()
+        assert lock.owned()
+        seen = []
+        t = threading.Thread(target=lambda: seen.append(lock.owned()))
+        t.start()
+        t.join()
+        assert seen == [False]           # other thread does not own it
+    assert not lock.owned()
+
+
+def test_guarded_containers_raise_off_lock_and_allow_under_lock():
+    san = Sanitizer()
+    d = san.dict({"a": 1}, what="d")
+    q = san.deque(what="q")
+    ls = san.list([3, 1, 2], what="l")
+
+    with pytest.raises(ConcurrencyViolation):
+        d["b"] = 2
+    with pytest.raises(ConcurrencyViolation):
+        d.pop("a")
+    with pytest.raises(ConcurrencyViolation):
+        q.append(1)
+    with pytest.raises(ConcurrencyViolation):
+        ls[0] = 9
+    with pytest.raises(ConcurrencyViolation):
+        ls.sort()
+
+    assert d["a"] == 1                   # reads never require the lock
+    assert list(ls) == [3, 1, 2]
+
+    with san.lock:
+        d["b"] = 2
+        del d["b"]
+        q.append(1)
+        assert q.popleft() == 1
+        ls.append(4)
+        ls.sort()
+    assert list(ls) == [1, 2, 3, 4]
+
+
+def test_enabled_reads_env(monkeypatch):
+    for val, want in [("1", True), ("true", True), ("YES", True),
+                      ("on", True), ("0", False), ("", False),
+                      ("off", False)]:
+        monkeypatch.setenv("QBS_SANITIZE", val)
+        assert enabled() is want, val
+    monkeypatch.delenv("QBS_SANITIZE")
+    assert enabled() is False
+
+
+# ------------------------------------------------------- service wiring
+
+
+def test_sanitize_kwarg_overrides_env(index, monkeypatch):
+    monkeypatch.setenv("QBS_SANITIZE", "1")
+    assert isinstance(StreamingService(index)._pending, GuardedDict)
+    assert isinstance(StreamingService(index, sanitize=False)._pending, dict)
+    assert not isinstance(
+        StreamingService(index, sanitize=False)._pending, GuardedDict)
+    monkeypatch.delenv("QBS_SANITIZE")
+    assert not isinstance(StreamingService(index)._pending, GuardedDict)
+    assert isinstance(
+        StreamingService(index, sanitize=True)._pending, GuardedDict)
+
+
+def test_sanitized_service_matches_plain(index):
+    rng = np.random.default_rng(3)
+    us = rng.integers(0, 45, size=40).astype(np.int32)
+    vs = rng.integers(0, 45, size=40).astype(np.int32)
+    plain = ServingService(index).query_batch(us, vs)
+    got = StreamingService(index, sanitize=True).query_batch(us, vs)
+    for a, b in zip(got, plain):
+        assert a.dist == b.dist and a.d_top == b.d_top
+        assert np.array_equal(a.edge_ids, b.edge_ids)
+
+
+def test_external_off_lock_mutations_are_caught(index):
+    svc = StreamingService(index, sanitize=True)
+    with pytest.raises(ConcurrencyViolation):
+        svc._pending[(1, 2)] = (0, 0.0, 0)
+    with pytest.raises(ConcurrencyViolation):
+        svc.stats["submitted"] += 1
+    with pytest.raises(ConcurrencyViolation):
+        svc._inflight.append(None)
+    with pytest.raises(ConcurrencyViolation):
+        svc._chunk = 64                          # plain-attr rebind guard
+    with pytest.raises(ConcurrencyViolation):
+        svc.qos_stats["default"]["expired"] += 1
+    # the same mutations are legal for the lock holder
+    with svc._lock:
+        svc.stats["submitted"] += 1
+        svc.stats["submitted"] -= 1
+        svc._chunk = svc._chunk
+    # non-guarded attributes stay unrestricted
+    svc.some_annotation = "ok"
+
+
+def test_concurrent_submit_burst_under_sanitizer(index):
+    """Satellite regression: many threads hammering submit_batch while
+    the scheduler pumps inline must neither trip the sanitizer nor lose
+    or corrupt a single result."""
+    svc = StreamingService(index, sanitize=True)
+    expected = {}
+    ref = ServingService(index)
+    rng = np.random.default_rng(11)
+    per_thread = []
+    for _ in range(4):
+        us = rng.integers(0, 45, size=30).astype(np.int32)
+        vs = rng.integers(0, 45, size=30).astype(np.int32)
+        per_thread.append((us, vs))
+        for r in ref.query_batch(us, vs):
+            expected[(r.u, r.v)] = (r.dist, r.d_top)
+
+    futs = [None] * len(per_thread)
+    errors = []
+
+    def worker(i):
+        us, vs = per_thread[i]
+        try:
+            futs[i] = svc.submit_batch(us, vs)
+        except BaseException as e:                # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(per_thread))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    svc.drain()
+    for i, (us, vs) in enumerate(per_thread):
+        for fut, u, v in zip(futs[i], us.tolist(), vs.tolist()):
+            r = fut.result()
+            assert (r.dist, r.d_top) == expected[(u, v)], (u, v)
+    assert svc.stats["submitted"] == sum(len(u) for u, _ in per_thread)

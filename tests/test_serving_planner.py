@@ -212,7 +212,8 @@ def test_result_cache_lru_eviction_order():
 
 
 def test_result_cache_protected_slots():
-    protect = lambda key: key[0] == 0       # "hub" endpoint is vertex 0
+    def protect(key):
+        return key[0] == 0                  # "hub" endpoint is vertex 0
     c = ResultCache(4, protect=protect, protected_frac=0.5)  # 2 protected
     c.put((0, 1), _v(1))                    # protected
     for i in range(2, 7):                   # cold flood: 5 unprotected

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, train loop, data pipeline determinism,
 checkpoint/restart (preemption simulation), compressed collectives."""
-import os
 
 import numpy as np
 import pytest

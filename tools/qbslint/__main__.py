@@ -1,0 +1,69 @@
+"""CLI: ``python -m tools.qbslint [paths...]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/parse errors.  ``--format
+json`` emits a machine-readable findings list (the CI static job
+uploads it as an artifact); default is ``path:line:col: RULE message``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .core import lint_paths
+from .rules import ALL_RULES, RULES_BY_ID
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.qbslint",
+        description="QbS repo-invariant static analysis (rules QBS001-006)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None,
+                    help="also write findings to this file")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id}  {rule.summary}")
+        return 0
+
+    rules = None
+    if args.rules:
+        ids = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in ids if r not in RULES_BY_ID]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+        rules = [RULES_BY_ID[r] for r in ids]
+
+    findings, errors = lint_paths(args.paths or ["src"], rules)
+
+    if args.format == "json":
+        text = json.dumps(
+            {"findings": [vars(f) for f in findings], "errors": errors},
+            indent=1)
+    else:
+        lines = [f.render() for f in findings] + errors
+        n = len(findings)
+        lines.append(f"qbslint: {n} finding{'s' if n != 1 else ''}, "
+                     f"{len(errors)} error{'s' if len(errors) != 1 else ''}")
+        text = "\n".join(lines)
+    print(text)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+    if errors:
+        return 2
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

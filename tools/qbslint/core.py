@@ -1,0 +1,163 @@
+"""Lint driver: file discovery, suppression parsing, rule dispatch.
+
+Rules are pure functions of one parsed module (``ast`` tree + source
+text + path); the driver owns everything path- and comment-shaped so a
+rule never re-tokenizes.  Suppressions:
+
+* ``# qbslint: disable=QBS001`` (or ``disable=QBS001,QBS005``) on a
+  line suppresses those rules' findings anchored to that line;
+  ``disable`` with no ``=`` suppresses every rule on the line.
+* ``# qbslint: disable-file=QBS001`` anywhere suppresses the rule for
+  the whole file.
+* ``# qbslint: locked`` on a ``def`` line declares the method's
+  contract is "caller holds the lock" (consumed by QBS005).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Sequence
+
+_PRAGMA = re.compile(
+    r"#\s*qbslint:\s*(?P<kind>disable-file|disable|locked)"
+    r"(?:\s*=\s*(?P<rules>[A-Z0-9, ]+))?")
+
+
+class LintError(Exception):
+    """A file could not be linted (syntax error, unreadable)."""
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclass
+class Suppressions:
+    """Parsed qbslint pragmas of one file."""
+
+    by_line: dict[int, set[str] | None] = field(default_factory=dict)
+    file_wide: set[str] = field(default_factory=set)
+    locked_lines: set[int] = field(default_factory=set)
+
+    def allows(self, finding: Finding) -> bool:
+        if finding.rule in self.file_wide:
+            return False
+        rules = self.by_line.get(finding.line, ...)
+        if rules is ...:
+            return True
+        return not (rules is None or finding.rule in rules)
+
+
+@dataclass
+class Module:
+    """One parsed source file as the rules see it."""
+
+    path: str            # posix path string used for rule scoping
+    tree: ast.Module
+    source: str
+    suppressions: Suppressions
+
+    def is_locked_def(self, node: ast.AST) -> bool:
+        """True when the ``def`` carries a ``# qbslint: locked`` marker."""
+        return getattr(node, "lineno", -1) in self.suppressions.locked_lines
+
+
+def _parse_suppressions(source: str) -> Suppressions:
+    sup = Suppressions()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        comments = [(i + 1, line) for i, line in enumerate(source.splitlines())
+                    if "#" in line]
+    for lineno, text in comments:
+        m = _PRAGMA.search(text)
+        if not m:
+            continue
+        kind = m.group("kind")
+        rules = m.group("rules")
+        ids = ({r.strip() for r in rules.split(",") if r.strip()}
+               if rules else None)
+        if kind == "locked":
+            sup.locked_lines.add(lineno)
+        elif kind == "disable-file":
+            sup.file_wide |= ids or set()
+        else:  # disable
+            existing = sup.by_line.get(lineno, set())
+            if ids is None or existing is None:
+                sup.by_line[lineno] = None     # all rules
+            else:
+                sup.by_line[lineno] = existing | ids
+    return sup
+
+
+def parse_module(path: str, source: str) -> Module:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        raise LintError(f"{path}:{e.lineno or 0}:0: syntax error: {e.msg}")
+    return Module(path=Path(path).as_posix(), tree=tree, source=source,
+                  suppressions=_parse_suppressions(source))
+
+
+def lint_source(path: str, source: str, rules: Sequence | None = None
+                ) -> list[Finding]:
+    from .rules import ALL_RULES
+    mod = parse_module(path, source)
+    out: list[Finding] = []
+    for rule in (rules if rules is not None else ALL_RULES):
+        if not rule.applies(mod.path):
+            continue
+        out.extend(f for f in rule.check(mod) if mod.suppressions.allows(f))
+    return sorted(out)
+
+
+def lint_file(path: str | Path, rules: Sequence | None = None
+              ) -> list[Finding]:
+    p = Path(path)
+    try:
+        source = p.read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError) as e:
+        raise LintError(f"{p}: unreadable: {e}")
+    return lint_source(str(p), source, rules)
+
+
+def iter_py_files(paths: Iterable[str | Path]) -> Iterable[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file():
+            if p.suffix == ".py":
+                yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part.startswith(".") or part == "__pycache__"
+                           for part in f.parts):
+                    yield f
+        else:
+            raise LintError(f"{p}: no such file or directory")
+
+
+def lint_paths(paths: Iterable[str | Path], rules: Sequence | None = None
+               ) -> tuple[list[Finding], list[str]]:
+    """Lint every ``.py`` under ``paths``.  Returns (findings, errors)."""
+    findings: list[Finding] = []
+    errors: list[str] = []
+    for f in iter_py_files(paths):
+        try:
+            findings.extend(lint_file(f, rules))
+        except LintError as e:
+            errors.append(str(e))
+    return findings, errors
