@@ -5,16 +5,28 @@ precomputed landmark-to-landmark SPGs, derived from labels exactly as the
 recover search does.  Meta-graph size is bounded by |R|^2 entries.
 PPL/ParentPPL label-entry counts show the blowup the paper reports
 (hundreds of times larger).
+
+The ``label_size/packed/*`` rows measure what the serving tables
+*actually occupy* in HBM (``core.packing``, DESIGN.md §10): packed
+uint8/uint16 bytes vs the int32 baseline layout, appended to BENCH.json
+per graph (acceptance floor: ratio >= 3.5x; uint8 gives exactly 4.0x).
 """
 from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
 
 from repro.core import INF, build_labelling, labelling_size_bytes, select_landmarks
 from repro.core.baselines import PPLIndex
+from repro.core.packing import packed_size_bytes
 
 from .common import bench_suite, emit
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH.json"
 
 PPL_CAP = 1_500
 PARENT_CAP = 600
@@ -46,6 +58,8 @@ def delta_size_edges(graph, scheme) -> int:
 
 def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
     rows = []
+    record = {"bench": "label_size", "ts": time.time(), "scale": scale,
+              "rows": []}
     for bg in bench_suite(scale):
         g = bg.graph
         scheme = build_labelling(g, select_landmarks(g, 20))
@@ -53,6 +67,16 @@ def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
         graph_bytes = g.n_edges * 4  # paper: 8 bytes per undirected edge
         rows.append((f"label_size/qbs_L/{bg.name}", sz["label_bytes"],
                      f"ratio_to_graph={sz['label_bytes'] / graph_bytes:.3f}"))
+        psz = packed_size_bytes(scheme.packed())
+        rows.append((f"label_size/packed/{bg.name}", psz["packed_bytes"],
+                     f"ratio={psz['ratio']:.2f}x,dtype={psz['dtype']}"))
+        record["rows"].append({
+            "graph": bg.name, "dtype": psz["dtype"],
+            "packed_bytes": float(psz["packed_bytes"]),
+            "int32_bytes": float(psz["int32_bytes"]),
+            "bytes_per_vertex": psz["packed_bytes"] / g.n_vertices,
+            "ratio": psz["ratio"],
+        })
         d_edges = delta_size_edges(g, scheme)
         rows.append((f"label_size/qbs_delta/{bg.name}", d_edges * 5,
                      f"edges={d_edges}"))
@@ -80,6 +104,8 @@ def run(scale: float = 1.0, sweep: bool = False) -> list[tuple]:
             sz = labelling_size_bytes(scheme)
             rows.append((f"label_size/sweep_R{r}/ba-hub", sz["label_bytes"],
                          f"meta_edges={sz['n_meta_edges']}"))
+    with BENCH_PATH.open("a") as fh:
+        fh.write(json.dumps(record) + "\n")
     return rows
 
 

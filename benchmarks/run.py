@@ -2,15 +2,50 @@
 
 Emits ``name,us_per_call,derived`` CSV (us_per_call is bytes for the size
 benches, % for coverage, distance for distance_dist — the name prefix
-disambiguates; -1 means DNF-analog).
+disambiguates; -1 means DNF-analog).  Several modules also append JSON
+records to the BENCH.json trajectory; the driver reports how many bytes
+the run appended, and ``--prune-keep N`` rewrites the trajectory keeping
+only the last N records per ``(bench, scale)`` (append-only files grow
+forever; the gate only ever reads the latest record, so pruning is safe).
 
   PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--quick]
+      [--prune-keep N]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH.json"
+
+
+def prune_bench(path: Path, keep: int) -> int:
+    """Keep the last ``keep`` records per (bench, scale); returns the
+    number of records dropped.  Unparseable lines are preserved."""
+    if keep < 1:
+        raise ValueError("--prune-keep must be >= 1")
+    if not path.exists():
+        return 0
+    lines = [ln for ln in path.read_text().splitlines() if ln.strip()]
+    keys = []
+    for ln in lines:
+        try:
+            rec = json.loads(ln)
+            keys.append((rec.get("bench"), rec.get("scale")))
+        except json.JSONDecodeError:
+            keys.append(None)   # never prune what we can't parse
+    seen: dict = {}
+    for i, key in enumerate(keys):
+        if key is not None:
+            seen.setdefault(key, []).append(i)
+    drop = {i for idxs in seen.values() for i in idxs[:-keep]}
+    if drop:
+        path.write_text(
+            "".join(ln + "\n" for i, ln in enumerate(lines) if i not in drop))
+    return len(drop)
 
 
 def main() -> None:
@@ -18,6 +53,9 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs, no sweeps")
+    ap.add_argument("--prune-keep", type=int, default=None, metavar="N",
+                    help="after the run, keep only the last N BENCH.json "
+                         "records per (bench, scale)")
     args = ap.parse_args()
     scale = 0.25 if args.quick else args.scale
     sweep = not args.quick
@@ -30,12 +68,14 @@ def main() -> None:
         label_size,
         qos_scheduler,
         query_time,
+        roofline,
         serving_throughput,
         sketch_kernel,
         streaming_admission,
     )
     from .common import emit
 
+    bench_bytes0 = BENCH_PATH.stat().st_size if BENCH_PATH.exists() else 0
     t0 = time.time()
     print("name,us_per_call,derived")
     for mod, kw in (
@@ -48,11 +88,21 @@ def main() -> None:
         (serving_throughput, {}),
         (streaming_admission, {}),
         (qos_scheduler, {}),
+        (roofline, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))
         print(f"# {mod.__name__} done in {time.time() - t:.1f}s", file=sys.stderr)
     emit(sketch_kernel.run())
+    bench_bytes1 = BENCH_PATH.stat().st_size if BENCH_PATH.exists() else 0
+    print(f"# BENCH.json: +{bench_bytes1 - bench_bytes0} bytes appended "
+          f"({bench_bytes1} total)", file=sys.stderr)
+    if args.prune_keep is not None:
+        dropped = prune_bench(BENCH_PATH, args.prune_keep)
+        size = BENCH_PATH.stat().st_size if BENCH_PATH.exists() else 0
+        print(f"# BENCH.json: pruned {dropped} record(s), keeping last "
+              f"{args.prune_keep} per (bench, scale) ({size} bytes)",
+              file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -67,7 +67,8 @@ def _row_key(row: dict) -> tuple:
 
 
 def compare(baseline: dict, current: dict, threshold: float,
-            min_us: float = 50.0) -> tuple[list, list]:
+            min_us: float = 50.0,
+            frac_floor: float = 0.01) -> tuple[list, list]:
     """Compare two ``load_latest`` maps.  Returns ``(regressions, notes)``
     where each regression is a dict with the offending row key, metric,
     baseline/current values and the ratio.
@@ -75,7 +76,14 @@ def compare(baseline: dict, current: dict, threshold: float,
     Rows whose *baseline* latency sits under ``min_us`` are skipped
     entirely: sub-tens-of-microseconds timings are cache-hit hot loops
     whose run-to-run spread dwarfs any threshold a gate could hold (the
-    skewed/cached serving row swings >2x between healthy runs)."""
+    skewed/cached serving row swings >2x between healthy runs).
+
+    Rows carrying ``roofline_frac`` (``benchmarks/roofline.py``) are
+    gated by an *absolute floor* instead of the relative threshold: the
+    achieved fraction already normalizes out machine speed, so the gate
+    fails only when the current fraction collapses below ``frac_floor``
+    — a kernel falling off its roofline — never on run-to-run wiggle of
+    an otherwise healthy fraction."""
     regressions, notes = [], []
     for rec_key, base_rec in sorted(baseline.items(), key=str):
         cur_rec = current.get(rec_key)
@@ -96,6 +104,16 @@ def compare(baseline: dict, current: dict, threshold: float,
             if cur_row is None:
                 notes.append(f"no current row for {dict(key)} (skipped)")
                 continue
+            if "roofline_frac" in cur_row:
+                frac = float(cur_row["roofline_frac"])
+                if frac < frac_floor:
+                    regressions.append({
+                        "bench": rec_key[0], "scale": rec_key[1],
+                        "row": dict(key), "metric": "roofline_frac",
+                        "baseline": frac_floor, "current": frac,
+                        "ratio": frac / max(frac_floor, 1e-12),
+                    })
+                continue   # absolute-floor rows never hit the relative rule
             for metric, sense in TRACKED.items():
                 if metric not in base_row or metric not in cur_row:
                     continue
@@ -124,6 +142,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="skip rows whose baseline latency is below this "
                          "(noise-dominated cache-hit loops; default 50)")
+    ap.add_argument("--frac-floor", type=float, default=0.01,
+                    help="absolute floor for roofline_frac rows (fail iff "
+                         "current < floor; default 0.01)")
     ap.add_argument("--scale", type=float, default=None,
                     help="only gate/refresh records at this scale (CI "
                          "pins 0.25; default: all)")
@@ -145,7 +166,8 @@ def main(argv=None) -> int:
         print(f"bench gate: no baseline at {args.baseline}; nothing to gate")
         return 0
     regressions, notes = compare(baseline, current, args.threshold,
-                                 min_us=args.min_us)
+                                 min_us=args.min_us,
+                                 frac_floor=args.frac_floor)
     for note in notes:
         print(f"bench gate: {note}")
     if regressions:

@@ -14,6 +14,14 @@ from .graph import (
 )
 from .frontier import FrontierEngine, HubSplit, make_relay, segment_or
 from .labelling import LabellingScheme, build_labelling, labelling_size_bytes, meta_apsp
+from .packing import (
+    PackedLabels,
+    pack_bits,
+    pack_labelling,
+    packed_size_bytes,
+    unpack_bits,
+    widen_dist,
+)
 from .qbs import QbSIndex, SPGResult
 from .search import Query, SearchContext, SearchResult, guided_search, make_search_context
 from .sketch import SketchBatch, compute_sketch_batch, d_top_only
@@ -39,6 +47,12 @@ __all__ = [
     "build_labelling",
     "labelling_size_bytes",
     "meta_apsp",
+    "PackedLabels",
+    "pack_bits",
+    "pack_labelling",
+    "packed_size_bytes",
+    "unpack_bits",
+    "widen_dist",
     "QbSIndex",
     "SPGResult",
     "Query",

@@ -35,6 +35,11 @@ from ..compat import shard_map
 from .frontier import segment_or
 from .graph import INF, Graph
 from .labelling import LabellingScheme, meta_apsp
+# Bit-packed word layout shared with the hybrid frontier's hub block; the
+# canonical definitions live in core.packing (DESIGN.md §10).
+from .packing import PackedLabels
+from .packing import pack_bits as _pack_bits
+from .packing import unpack_bits as _unpack_bits
 from .search import Query, SearchContext, guided_search
 from .sketch import compute_sketch_batch
 
@@ -86,22 +91,6 @@ def partition_edges(graph: Graph, n_shards: int) -> EdgePartition:
     return EdgePartition(src_sh, dst_sh, vstart.astype(np.int32), v_loc, e_max)
 
 
-def _pack_bits(x: jax.Array) -> jax.Array:
-    """(..., N) bool -> (..., ceil(N/32)) uint32."""
-    n = x.shape[-1]
-    pad = (-n) % 32
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    x = x.reshape(*x.shape[:-1], -1, 32).astype(jnp.uint32)
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    return (x * weights).sum(axis=-1, dtype=jnp.uint32)
-
-
-def _unpack_bits(x: jax.Array, n: int) -> jax.Array:
-    """(..., W) uint32 -> (..., n) bool."""
-    bits = (x[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
-    out = bits.reshape(*x.shape[:-1], -1)
-    return out[..., :n].astype(bool)
 
 
 def make_labelling_step(
@@ -464,12 +453,16 @@ def make_serve_step(
     max_levels: int = 64,
     max_chain: int = 64,
     use_pallas: bool = False,
+    packed: PackedLabels | None = None,
 ):
     """Return a jitted serve step: (us, vs) batch -> (edge_mask, dist),
     batch-sharded across the mesh, graph/labels replicated.  ``use_pallas``
     selects the sketch kernel like ``QbSIndex(use_pallas=...)`` does for
     the single-device pipeline (the serving service threads the index's
-    setting through)."""
+    setting through).  ``packed=`` replicates the index's packed label
+    tables instead of the int32 scheme arrays (~4x fewer replicated label
+    bytes per device; ``compute_sketch_batch`` widens in registers) — the
+    two are bit-identical."""
     axis_names = axis_names or tuple(mesh.axis_names)
     searcher = partial(
         guided_search, n_vertices=n_vertices,
@@ -500,4 +493,5 @@ def make_serve_step(
         out_specs=(batch_spec, batch_spec),
     )
     fn = jax.jit(step_sharded)
-    return partial(fn, ctx, scheme.label_dist, scheme.meta_w, scheme.meta_dist)
+    labels = scheme if packed is None else packed
+    return partial(fn, ctx, labels.label_dist, labels.meta_w, labels.meta_dist)

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import INF, Graph
+from .packing import pack_bits, unpack_bits
 
 BACKENDS = ("segment", "csr", "hybrid")
 
@@ -198,7 +199,12 @@ class FrontierEngine:
 
     def _relay_hybrid(self, f: jax.Array) -> jax.Array:
         hub_ids = self.arrays["hub_ids"]
-        adj_hh = self.arrays["adj_hh"]
+        # hub-hub reachability rows live bit-packed in HBM (32 columns per
+        # uint32 word, core.packing layout); the Pallas kernel unpacks word
+        # tiles in VMEM and the matmul fallback unpacks inside this program
+        # — the dense (H, H) mask never persists in HBM
+        adj_words = self.arrays["adj_hh_words"]
+        h = hub_ids.shape[0]
         tail_src = self.arrays.get("tail_src")
         if tail_src is not None:
             out = segment_or(f[:, tail_src], self.arrays["tail_dst"],
@@ -207,10 +213,11 @@ class FrontierEngine:
             out = jnp.zeros((f.shape[0], self.n_vertices), bool)
         f_h = f[:, hub_ids]
         if self.use_pallas:
-            from ..kernels.frontier import bitmap_expand
-            next_h = bitmap_expand(f_h, adj_hh, interpret=self.interpret)
+            from ..kernels.frontier import bitmap_expand_packed
+            next_h = bitmap_expand_packed(f_h, adj_words, n_cols=h,
+                                          interpret=self.interpret)
         else:
-            next_h = _dense_or_matmul(f_h, adj_hh)
+            next_h = _dense_or_matmul(f_h, unpack_bits(adj_words, h))
         return out.at[:, hub_ids].set(out[:, hub_ids] | next_h)
 
 
@@ -375,7 +382,9 @@ def make_relay(
         adj[split.hub_pos[src_np[dead]], split.hub_pos[dst_np[dead]]] = False
         keep_tail = keep_tail & mask_np
     arrays["hub_ids"] = jnp.asarray(split.hub_ids)
-    arrays["adj_hh"] = jnp.asarray(adj)
+    # store the hub-hub block bit-packed end-to-end (uint32 words); both
+    # relay paths unpack on the fly (_relay_hybrid)
+    arrays["adj_hh_words"] = pack_bits(jnp.asarray(adj))
     if keep_tail.any():
         arrays["tail_src"] = jnp.asarray(src_np[keep_tail])
         arrays["tail_dst"] = jnp.asarray(dst_np[keep_tail])

@@ -48,6 +48,14 @@ class LabellingScheme(NamedTuple):
     def label_valid(self) -> jax.Array:
         return self.label_dist < INF
 
+    def packed(self, lm_dist=None):
+        """The packed-HBM view of this scheme (``core.packing``): uint8 or
+        uint16 by measured diameter, dtype max as the INF sentinel.  The
+        int32 arrays here stay the host-side build/oracle representation;
+        serving reads the packed tables (``QbSIndex.packed``)."""
+        from .packing import pack_labelling
+        return pack_labelling(self, lm_dist=lm_dist)
+
 
 @partial(jax.jit, static_argnames=("max_levels",))
 def _build_labelling_arrays(
@@ -143,7 +151,9 @@ def build_labelling(
 
 def labelling_size_bytes(scheme: LabellingScheme) -> dict:
     """Paper's size accounting (§6.1): |R| * 8 bits per vertex for L, plus
-    the meta-graph.  Distances on complex networks fit 8 bits."""
+    the meta-graph.  Distances on complex networks fit 8 bits — which is
+    no longer aspirational: ``packing.packed_size_bytes`` measures the
+    bytes the packed tables actually occupy in HBM."""
     v = int(scheme.label_dist.shape[0])
     r = scheme.n_landmarks
     n_meta = int(np.asarray((scheme.meta_w < INF).sum()))

@@ -52,6 +52,7 @@ import numpy as np
 from .frontier import bfs_depths_batch, make_relay
 from .graph import INF, Graph, select_landmarks
 from .labelling import LabellingScheme, build_labelling
+from .packing import pack_labelling, widen_dist
 from .search import (
     Query,
     guided_search,
@@ -108,7 +109,10 @@ def _reverse_edge_map(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
 
 @jax.jit
 def _dists_to_landmark(label_dist, meta_dist, lid, is_landmark, r_idx):
-    """(V,) exact d_G(x, landmark r_idx) from label rows + meta APSP."""
+    """(V,) exact d_G(x, landmark r_idx) from label rows + meta APSP.
+    Dual-mode inputs: packed tables widen in-register (core.packing)."""
+    label_dist = widen_dist(label_dist)
+    meta_dist = widen_dist(meta_dist)
     col = meta_dist[:, r_idx]                               # (R,)
     base = jnp.min(label_dist + col[None, :], axis=1)       # non-landmark rows
     at_lm = meta_dist[jnp.clip(lid, 0, None), r_idx]
@@ -141,10 +145,12 @@ def _landmark_pair_lanes(lm_dist, meta_dist, src, dst, rev_edge, ru, rv):
     """Landmark-landmark lane: (B,) landmark index pairs -> (dist (B,),
     edge_mask (B, E)).  Distance is a ``meta_dist`` lookup; every SPG edge
     certifies from two rows of the precomputed (R, V) landmark-distance
-    table ``lm_dist`` — no search, no per-chunk recomputation."""
-    d = jnp.minimum(meta_dist[ru, rv], INF).astype(jnp.int32)
+    table ``lm_dist`` — no search, no per-chunk recomputation.  Both tables
+    arrive packed; only the gathered rows widen (in registers)."""
+    d = jnp.minimum(widen_dist(meta_dist[ru, rv]), INF).astype(jnp.int32)
     mask = _certify_spg_edges_batch(src, dst, rev_edge,
-                                    lm_dist[ru], lm_dist[rv], d)
+                                    widen_dist(lm_dist[ru]),
+                                    widen_dist(lm_dist[rv]), d)
     return d, mask & (d < INF)[:, None]
 
 
@@ -156,7 +162,7 @@ def _landmark_onesided_lanes(engine, lm_dist, src, dst, rev_edge,
     each row bounded at its own d - 1 (those shortest paths may pass
     *through* landmarks, so the G- engine is wrong here — ``engine`` is
     the unmasked full-graph relay)."""
-    to_lm = lm_dist[r_idx]                              # (B, V)
+    to_lm = widen_dist(lm_dist[r_idx])                  # (B, V)
     d = to_lm[jnp.arange(roots.shape[0]), roots]
     bounds = jnp.where(d < INF, d - 1, 0)   # disconnected rows never expand
     depth = bfs_depths_batch(engine, roots, max_levels, bounds=bounds)
@@ -181,8 +187,20 @@ class QbSIndex:
         self.backend = backend
 
         engine_opts = engine_opts or {}
+        # (R, V) exact vertex-to-landmark distances, a pure function of the
+        # labelling — built once here so the landmark lane steps gather
+        # rows instead of re-reducing the label matrix every chunk.
+        lm_dist = _dists_to_landmark_batch(
+            scheme.label_dist, scheme.meta_dist, scheme.lid,
+            scheme.is_landmark, jnp.arange(scheme.n_landmarks))
+        # The packed label tables (uint8/uint16 + INF sentinel, dtype chosen
+        # from the measured diameter — core.packing, DESIGN.md §10) are what
+        # HBM holds; every jit consumer below widens gathered rows in
+        # registers.  The int32 scheme stays the host-side build artifact.
+        self.packed = pack_labelling(scheme, lm_dist=lm_dist)
+        self._lm_dist = self.packed.lm_dist
         self.ctx = make_search_context(graph, scheme, backend=backend,
-                                       **engine_opts)
+                                       packed=self.packed, **engine_opts)
         # Unmasked full-graph relay for the landmark-endpoint path (those
         # shortest paths may pass *through* landmarks, so G- is wrong there).
         self._full_engine = make_relay(graph, backend=backend, **engine_opts)
@@ -193,12 +211,6 @@ class QbSIndex:
         self._rev_edge_j = jnp.asarray(self._rev_edge)
         self._is_landmark_np = np.asarray(is_l)
         self._lid_np = np.asarray(scheme.lid)
-        # (R, V) exact vertex-to-landmark distances, a pure function of the
-        # labelling — built once here so the landmark lane steps gather
-        # rows instead of re-reducing the label matrix every chunk.
-        self._lm_dist = _dists_to_landmark_batch(
-            scheme.label_dist, scheme.meta_dist, scheme.lid,
-            scheme.is_landmark, jnp.arange(scheme.n_landmarks))
         self._service = None
 
         v = graph.n_vertices
@@ -208,6 +220,8 @@ class QbSIndex:
         )
 
         def search_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
+            # gather the *packed* rows from HBM; compute_sketch_batch
+            # widens them (and the packed meta tables) in registers
             lu = label_dist[us]
             lv = label_dist[vs]
             sk = compute_sketch_batch(lu, lv, meta_w, meta_dist,
@@ -237,8 +251,8 @@ class QbSIndex:
         landmark-endpoint lanes are garbage here — the planner routes them
         to the landmark lane steps below."""
         d, m = self._search_batch(
-            self.ctx, self.scheme.label_dist, self.scheme.meta_w,
-            self.scheme.meta_dist, us, vs,
+            self.ctx, self.packed.label_dist, self.packed.meta_w,
+            self.packed.meta_dist, us, vs,
         )
         return _symmetrize(d, m, self._rev_edge_j)
 
@@ -246,7 +260,7 @@ class QbSIndex:
         """Landmark-landmark lane step: (B,) landmark-index pairs ->
         device ``(dist (B,), edge_mask (B, E))``, label-only, no sync."""
         return _landmark_pair_lanes(
-            self._lm_dist, self.scheme.meta_dist,
+            self._lm_dist, self.packed.meta_dist,
             self.graph.src, self.graph.dst, self._rev_edge_j, ru, rv)
 
     def landmark_onesided_step(self, roots, r_idx):

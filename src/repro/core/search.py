@@ -28,9 +28,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .frontier import FrontierEngine, make_relay
 from .graph import INF, Graph
+from .packing import PackedLabels, pack_dist, pack_labelling, widen_dist
 
 
 class SearchContext(NamedTuple):
@@ -41,8 +43,8 @@ class SearchContext(NamedTuple):
     gminus_e: jax.Array     # (E,) bool: both endpoints are non-landmarks
     is_landmark: jax.Array  # (V,) bool
     lid: jax.Array          # (V,) int32: vertex -> landmark index, -1 otherwise
-    label_dist: jax.Array   # (V, R) int32, INF = no entry
-    meta_w: jax.Array       # (R, R) int32 direct meta edge weights
+    label_dist: jax.Array   # (V, R) packed uint8/uint16 (sentinel = INF)
+    meta_w: jax.Array       # (R, R) packed direct meta edge weights
     engine: FrontierEngine  # G- relay (gminus_e baked in as the edge mask)
 
 
@@ -52,26 +54,35 @@ def make_search_context(
     *,
     backend: str = "segment",
     engine: FrontierEngine | None = None,
+    packed: PackedLabels | None = None,
     **engine_kw,
 ) -> SearchContext:
     """Build the per-graph search context (single construction point for the
     replicated-label path: ``QbSIndex``, the Bi-BFS baseline, the sharded
     serve step).  ``scheme=None`` means an empty landmark set, which is
     exactly the Bi-BFS degeneration.  ``engine`` overrides the built one
-    (tests); otherwise the relay backend is chosen by ``backend=``."""
+    (tests); otherwise the relay backend is chosen by ``backend=``.
+
+    The label tables enter the context *packed* (``core.packing``): pass
+    ``packed=`` to share the caller's ``PackedLabels`` buffers (as
+    ``QbSIndex`` does, so HBM holds one packed copy for sketch + recover),
+    otherwise the scheme is packed here.  ``widen_dist`` at the use sites
+    restores exact int32/INF semantics inside the jit programs."""
     v, e = graph.n_vertices, graph.n_edges
     if scheme is None:
         gminus_e = jnp.ones((e,), bool)
         is_landmark = jnp.zeros((v,), bool)
         lid = jnp.full((v,), -1, jnp.int32)
-        label_dist = jnp.full((v, 1), INF, jnp.int32)
-        meta_w = jnp.full((1, 1), INF, jnp.int32)
+        label_dist = pack_dist(np.full((v, 1), INF, np.int32), np.uint8)
+        meta_w = pack_dist(np.full((1, 1), INF, np.int32), np.uint8)
     else:
         is_landmark = scheme.is_landmark
         gminus_e = (~is_landmark[graph.src]) & (~is_landmark[graph.dst])
         lid = scheme.lid
-        label_dist = scheme.label_dist
-        meta_w = scheme.meta_w
+        if packed is None:
+            packed = pack_labelling(scheme)
+        label_dist = packed.label_dist
+        meta_w = packed.meta_w
     if engine is None:
         engine = make_relay(graph, backend=backend, edge_mask=gminus_e,
                             **engine_kw)
@@ -225,7 +236,7 @@ def _side_attach(ctx: SearchContext, depth, side_land, n_vertices: int, max_chai
 
     Returns (edge_mask, on) where on[x, r] certifies x on such a path.
     """
-    ld = ctx.label_dist
+    ld = widen_dist(ctx.label_dist)
     lvalid = ld < INF
     sigma = side_land  # (R,)
 
@@ -288,8 +299,8 @@ def _delta_edges(ctx: SearchContext, meta_edge, n_vertices: int):
     By the triangle inequality ld[x,i] + ld[y,j] - w[i,j] >= -1, so the
     existential test is  min_{i,j} masked(ld[x,i] + ld[y,j] - w[i,j]) == -1.
     """
-    ld = ctx.label_dist
-    w = ctx.meta_w
+    ld = widen_dist(ctx.label_dist)
+    w = widen_dist(ctx.meta_w)
     fin = (w < INF) & meta_edge
 
     # T[x, i] = min_j ( ld[x, j] + (-w[i, j] | INF) )

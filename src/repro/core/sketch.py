@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from ..kernels.ops import sketch_d_top as kernel_sketch_d_top
 from .graph import INF
+from .packing import widen_dist
 
 
 class SketchBatch(NamedTuple):
@@ -51,8 +52,14 @@ def compute_sketch_batch(
     *,
     use_pallas: bool = False,
 ) -> SketchBatch:
-    lu = lu.astype(jnp.int32)
-    lv = lv.astype(jnp.int32)
+    # Dual-mode inputs: packed uint8/uint16 rows (sentinel = INF) widen to
+    # int32 here, in the registers of this program — the packed table is
+    # what HBM holds (core.packing, DESIGN.md §10).  Unpacked int32 inputs
+    # pass through, keeping the oracle path bit-identical.
+    lu = widen_dist(lu)
+    lv = widen_dist(lv)
+    meta_w = widen_dist(meta_w)
+    meta_dist = widen_dist(meta_dist)
 
     # pi[b, r, r'] = delta_ur + d_M(r,r') + delta_r'v  (clamped to INF)
     pi = lu[:, :, None] + meta_dist[None, :, :] + lv[:, None, :]
@@ -65,8 +72,7 @@ def compute_sketch_batch(
         # route is about running the real serving path through the TPU
         # kernel — a d_top-only pipeline (kernels.ops.sketch_d_top,
         # d_top_only) is where it skips pi entirely.
-        d_top = jnp.minimum(
-            kernel_sketch_d_top(lu, lv, meta_dist.astype(jnp.int32)), INF)
+        d_top = jnp.minimum(kernel_sketch_d_top(lu, lv, meta_dist), INF)
     else:
         d_top = pi.min(axis=(1, 2))
     have = d_top < INF
@@ -109,6 +115,7 @@ def compute_sketch_batch(
 
 def d_top_only(lu: jax.Array, lv: jax.Array, meta_dist: jax.Array, minplus=minplus_vm) -> jax.Array:
     """Fast path computing just the bound d_top (used by benchmarks and the
-    Pallas kernel integration): two chained min-plus contractions."""
-    t = minplus(lu, meta_dist)                     # (B, R)
-    return jnp.minimum(jnp.min(t + lv, axis=1), INF)
+    Pallas kernel integration): two chained min-plus contractions.  Accepts
+    packed or unpacked inputs like ``compute_sketch_batch``."""
+    t = minplus(widen_dist(lu), widen_dist(meta_dist))     # (B, R)
+    return jnp.minimum(jnp.min(t + widen_dist(lv), axis=1), INF)

@@ -63,13 +63,14 @@ def bitmap_expand(
 ) -> jax.Array:
     """next[r, w] = any_v frontier[r, v] & adjacency[v, w].
 
-    frontier (R, V) bool; adjacency (V, V) bool -> (R, V) bool.
+    frontier (R, V) bool; adjacency (V, W) bool -> (R, W) bool.
     """
     if frontier.ndim != 2 or adjacency.ndim != 2:
         raise ValueError("rank-2 inputs required")
     if frontier.shape[1] != adjacency.shape[0]:
         raise ValueError(f"bad shapes {frontier.shape} x {adjacency.shape}")
-    r, v = frontier.shape
+    r = frontier.shape[0]
+    v = adjacency.shape[1]
     f = _pad_to(_pad_to(frontier.astype(jnp.float32), tm, 0), tk, 1)
     a = _pad_to(_pad_to(adjacency.astype(jnp.float32), tk, 0), tn, 1)
     k_grid = f.shape[1] // tk
@@ -88,3 +89,73 @@ def bitmap_expand(
         interpret=interpret,
     )(f, a)
     return out[:r, :v]
+
+
+def _expand_packed_kernel(f_ref, w_ref, o_ref, acc_ref, *, k_grid: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Unpack the (tk, tn/32) uint32 word tile into the (tk, tn) f32 operand
+    # in VMEM: bit i of word w is column 32*w + i (core.packing order).  The
+    # dense mask exists only here, per tile — HBM holds the words.
+    words = w_ref[...]
+    bits = (words[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    a = bits.reshape(words.shape[0], -1).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        f_ref[...], a, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_grid - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] > 0.5).astype(jnp.bool_)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cols", "tm", "tn", "tk", "interpret"))
+def bitmap_expand_packed(
+    frontier: jax.Array,
+    adj_words: jax.Array,
+    *,
+    n_cols: int | None = None,
+    tm: int = 8,
+    tn: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``bitmap_expand`` over a *bit-packed* adjacency: frontier (R, V)
+    bool x adj_words (V, W) uint32 (32 little-endian columns per word,
+    ``core.packing.pack_bits`` layout) -> (R, n_cols) bool.
+
+    The adjacency never materializes densely in HBM: each grid step loads a
+    uint32 word tile and unpacks it in VMEM right before the OR-AND matmul,
+    so the hub-hub reachability rows stay 32x smaller end-to-end.
+    """
+    if frontier.ndim != 2 or adj_words.ndim != 2:
+        raise ValueError("rank-2 inputs required")
+    if frontier.shape[1] != adj_words.shape[0]:
+        raise ValueError(f"bad shapes {frontier.shape} x {adj_words.shape}")
+    if tn % 32:
+        raise ValueError("tn must be a multiple of the 32-bit word width")
+    r = frontier.shape[0]
+    n = adj_words.shape[1] * 32 if n_cols is None else n_cols
+    tw = tn // 32
+    f = _pad_to(_pad_to(frontier.astype(jnp.float32), tm, 0), tk, 1)
+    w = _pad_to(_pad_to(adj_words, tk, 0), tw, 1)
+    k_grid = f.shape[1] // tk
+    grid = (f.shape[0] // tm, w.shape[1] // tw, k_grid)
+
+    out = pl.pallas_call(
+        functools.partial(_expand_packed_kernel, k_grid=k_grid),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tw), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((f.shape[0], w.shape[1] * 32),
+                                       jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(f, w)
+    return out[:r, :n]

@@ -62,6 +62,13 @@ def minplus(
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} x {b.shape}")
+    if jnp.issubdtype(a.dtype, jnp.unsignedinteger) or \
+            jnp.issubdtype(b.dtype, jnp.unsignedinteger):
+        # packed uint8/uint16 tables must widen first (sentinel + sentinel
+        # wraps around in the narrow dtype): core.packing.widen_dist
+        raise ValueError(
+            f"minplus on unsigned dtypes {a.dtype}/{b.dtype}; widen packed "
+            f"tables with core.packing.widen_dist before the contraction")
     m, k = a.shape
     _, n = b.shape
     big = jnp.asarray(1 << 24, a.dtype)  # > INF, still overflow-safe

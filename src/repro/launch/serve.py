@@ -16,6 +16,7 @@ from ..core import (
     barabasi_albert_graph,
     gnp_random_graph,
     labelling_size_bytes,
+    packed_size_bytes,
     ring_of_cliques,
 )
 
@@ -47,8 +48,11 @@ def main() -> None:
     idx = QbSIndex.build(g, n_landmarks=args.landmarks, chunk=args.chunk)
     t1 = time.perf_counter()
     sz = labelling_size_bytes(idx.scheme)
+    psz = packed_size_bytes(idx.packed)
     print(f"[serve] labelling built in {t1 - t0:.2f}s; "
           f"size(L)={sz['label_bytes'] / 1e6:.2f}MB meta_edges={sz['n_meta_edges']}")
+    print(f"[serve] packed tables: {psz['packed_bytes'] / 1e6:.2f}MB "
+          f"({psz['dtype']}, {psz['ratio']:.1f}x smaller than int32)")
 
     rng = np.random.default_rng(args.seed)
     us = rng.integers(0, g.n_vertices, size=args.queries)

@@ -107,7 +107,9 @@ def plan_queries(us: np.ndarray, vs: np.ndarray,
     cv = np.maximum(us, vs)
     # stable dedup: unique rows keep first-appearance order so execution
     # order (and thus device dispatch order) is reproducible
-    key = cu.astype(np.int64) * (int(is_landmark.shape[0]) + 1) + cv
+    # int64 on purpose: the dedup key is a (u * (V+1) + v) product that can
+    # exceed int32 for large V — it is transient, never a resident table
+    key = cu.astype(np.int64) * (int(is_landmark.shape[0]) + 1) + cv  # qbslint: disable=QBS007
     _, first, inv = np.unique(key, return_index=True, return_inverse=True)
     order = np.argsort(first, kind="stable")
     rank = np.empty_like(order)

@@ -48,6 +48,11 @@ def make_spg_serve_step(index) -> Callable:
     dispatches: search program + symmetrization program; see
     ``QbSIndex.__init__`` for why they are separate).
 
+    The label tables the step reads are the index's *packed* uint8/uint16
+    arrays (``QbSIndex.packed``, DESIGN.md §10): gathered rows widen to
+    int32 in registers inside the jit program, so HBM label traffic is
+    ~4x cheaper than the int32 layout while results stay bit-identical.
+
     Landmark-endpoint queries are *not* handled here (they have no label
     entries; the pipeline returns garbage lanes for them) — route them to
     the vectorized landmark lane steps (``QbSIndex.landmark_pair_step`` /

@@ -62,8 +62,44 @@ from .planner import (
     plan_queries,
 )
 
-_NO_EDGES = np.zeros((0,), np.int64)
+_NO_EDGES = np.zeros((0,), np.int32)   # edge counts fit int32 (E << 2^31)
 _NO_EDGES.flags.writeable = False   # shared by every trivial-lane result
+
+
+def _pack_result(value: tuple[int, np.ndarray]) -> tuple:
+    """Pack a ``(dist, edge_ids)`` result for cache residency (DESIGN.md
+    §10): int32 edge ids, delta-encoded as uint16 gaps when the sorted
+    (``flatnonzero``-built) id list allows it — the anchor id stays int32.
+    Returns ``(nbytes, dist, enc)``; ``nbytes`` feeds the byte-based
+    capacity accounting."""
+    dist, eids = value
+    eids = np.asarray(eids)
+    if eids.dtype != np.int32:
+        eids = eids.astype(np.int32)
+        eids.flags.writeable = False
+    if eids.size > 1:
+        deltas = np.diff(eids)
+        if deltas.min() >= 0 and deltas.max() < (1 << 16):
+            d16 = deltas.astype(np.uint16)
+            d16.flags.writeable = False
+            # 2 bytes per gap + 4-byte anchor + uint16 dist
+            return d16.nbytes + 6, int(dist), ("delta", int(eids[0]), d16)
+    return eids.nbytes + 2, int(dist), ("raw", eids)
+
+
+def _unpack_result(entry: tuple) -> tuple[int, np.ndarray]:
+    """Decode a packed cache entry back to ``(dist, edge_ids int32)``.
+    Decoded arrays are frozen like every shared result array."""
+    _, dist, enc = entry
+    if enc[0] == "raw":
+        return dist, enc[1]
+    _, first, d16 = enc
+    eids = np.empty((d16.size + 1,), np.int32)
+    eids[0] = first
+    eids[1:] = d16
+    np.cumsum(eids, out=eids)
+    eids.flags.writeable = False
+    return dist, eids
 
 
 class ResultCache:
@@ -79,26 +115,37 @@ class ResultCache:
     and hub-endpoint pairs dominate repeat traffic, so they keep their
     slots under floods of one-shot pairs.
 
+    Values live *packed* (``_pack_result``: int32/delta-uint16 edge ids)
+    and decode on ``get``; ``self.bytes`` tracks the packed payload bytes
+    and ``capacity_bytes`` optionally bounds them alongside the entry
+    count, so capacity can be provisioned in memory rather than entries.
+
     ``capacity=0`` is a valid no-op cache: every ``get`` misses and ``put``
     stores nothing (callers can keep the cache object unconditionally).
     """
 
     def __init__(self, capacity: int, *,
                  protect: Callable[[tuple[int, int]], bool] | None = None,
-                 protected_frac: float = 0.5):
+                 protected_frac: float = 0.5,
+                 capacity_bytes: int | None = None):
         if capacity < 0:
             raise ValueError("cache capacity must be non-negative")
+        if capacity_bytes is not None and capacity_bytes < 0:
+            raise ValueError("cache capacity_bytes must be non-negative")
         self.capacity = int(capacity)
+        self.capacity_bytes = (
+            None if capacity_bytes is None else int(capacity_bytes))
         self.protect = protect
         self.protected_cap = (
             max(1, int(capacity * protected_frac))
             if protect is not None and capacity else 0)
-        self._store: OrderedDict[tuple[int, int], tuple[int, np.ndarray]] = (
+        # both tiers map key -> (nbytes, dist, enc) packed entries
+        self._store: OrderedDict[tuple[int, int], tuple] = (
             OrderedDict())   # unprotected LRU tier
-        self._protected: OrderedDict[
-            tuple[int, int], tuple[int, np.ndarray]] = OrderedDict()
+        self._protected: OrderedDict[tuple[int, int], tuple] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.bytes = 0       # packed payload bytes currently resident
 
     def __len__(self) -> int:
         return len(self._store) + len(self._protected)
@@ -112,25 +159,37 @@ class ResultCache:
             if got is not None:
                 tier.move_to_end(key)
                 self.hits += 1
-                return got
+                return _unpack_result(got)
         self.misses += 1
         return None
+
+    def _evict_one(self) -> None:
+        _, entry = (self._store or self._protected).popitem(last=False)
+        self.bytes -= entry[0]
 
     def put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
         if self.capacity == 0:
             return
+        entry = _pack_result(value)
         # a key lives in exactly one tier; re-put refreshes tier + recency
-        self._store.pop(key, None)
-        self._protected.pop(key, None)
+        old = self._store.pop(key, None)
+        if old is None:
+            old = self._protected.pop(key, None)
+        if old is not None:
+            self.bytes -= old[0]
+        self.bytes += entry[0]
         if self.protected_cap and self.protect(key):
-            self._protected[key] = value
+            self._protected[key] = entry
             while len(self._protected) > self.protected_cap:
                 k, v = self._protected.popitem(last=False)
                 self._store[k] = v   # demote, don't drop
         else:
-            self._store[key] = value
+            self._store[key] = entry
         while len(self) > self.capacity:
-            (self._store or self._protected).popitem(last=False)
+            self._evict_one()
+        if self.capacity_bytes is not None:
+            while self.bytes > self.capacity_bytes and len(self):
+                self._evict_one()
 
 
 def round_chunk_to_shards(chunk: int, n_shards: int) -> int:
@@ -149,20 +208,25 @@ class ServingService:
     def __init__(self, index, *, async_depth: int = 2, cache_size: int = 0,
                  cache_policy: str = "lru", protected_frac: float = 0.5,
                  hub_top_frac: float = 0.01, cache_admission: str = "all",
+                 cache_size_bytes: int | None = None,
                  chunk: int | None = None, mesh=None, devices=None):
         self.index = index
         self.chunk = int(index.chunk if chunk is None else chunk)
         self.async_depth = max(1, int(async_depth))
         self.cache = None
-        if cache_size:
+        if cache_size or cache_size_bytes:
             if cache_policy == "lru":
                 protect = None
             elif cache_policy == "hub":
                 protect = self._hub_protect(hub_top_frac)
             else:
                 raise ValueError(f"unknown cache_policy={cache_policy!r}")
-            self.cache = ResultCache(cache_size, protect=protect,
-                                     protected_frac=protected_frac)
+            # byte-only provisioning: entry count is unbounded, the packed
+            # payload bytes are the capacity (ResultCache accounting)
+            cap = cache_size if cache_size else (1 << 62)
+            self.cache = ResultCache(cap, protect=protect,
+                                     protected_frac=protected_frac,
+                                     capacity_bytes=cache_size_bytes)
         # Cache *admission* (insertion) is a separate axis from eviction
         # (cache_policy): "all" inserts every computed result (the seed
         # behavior); "reuse" refuses predicted one-shot cold pairs — a key
@@ -183,7 +247,7 @@ class ServingService:
                                if self.cache.protect is not None
                                else self._hub_protect(hub_top_frac))
             self._seen_once = OrderedDict()
-            self._seen_cap = max(64, 4 * self.cache.capacity)
+            self._seen_cap = max(64, 4 * min(self.cache.capacity, 1 << 16))
         self.lane_served = [0] * N_LANES   # unique pairs answered per lane
 
         if mesh is None and devices is not None:
@@ -214,7 +278,7 @@ class ServingService:
                 index.ctx, index.scheme, mesh,
                 n_vertices=index.graph.n_vertices,
                 max_levels=index.max_levels, max_chain=index.max_chain,
-                use_pallas=index.use_pallas)
+                use_pallas=index.use_pallas, packed=index.packed)
 
     def _hub_protect(self, hub_top_frac: float):
         """Protect predicate for the hub-skew cache policy: a canonical
@@ -350,7 +414,7 @@ class ServingService:
             u_eids[row] = eids
         for rows, d, m in self._execute(plan):
             for k, row in enumerate(rows):
-                eids = np.flatnonzero(m[k])
+                eids = np.flatnonzero(m[k]).astype(np.int32)
                 # Frozen because the array is shared: duplicate queries fan
                 # it out to several results and the cache hands it back on
                 # later hits — an in-place mutation by a caller must not

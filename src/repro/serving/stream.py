@@ -685,7 +685,7 @@ class StreamingService:
             for k in range(live):
                 row = int(sel[k])
                 key = (int(plan.cu[row]), int(plan.cv[row]))
-                eids = np.flatnonzero(m[k])
+                eids = np.flatnonzero(m[k]).astype(np.int32)
                 eids.flags.writeable = False   # shared: waiters + cache
                 dist = int(d[k])
                 d_top = d_top_of(int(plan.lane[row]), dist, INF)

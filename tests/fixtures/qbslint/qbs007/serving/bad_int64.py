@@ -1,0 +1,15 @@
+"""Seeded QBS007 serving-scope violations: np.int64 on the host tier."""
+import numpy as np
+
+
+def dedup_key(cu, cv, v):
+    return cu.astype(np.int64) * (v + 1) + cv  # line 6: fires (np.int64)
+
+
+def empty_edges():
+    return np.zeros((0,), np.int64)            # line 10: fires
+
+
+def justified_key(cu, cv, v):
+    # products can exceed int32; suppression keeps the width auditable
+    return cu.astype(np.int64) * (v + 1) + cv  # qbslint: disable=QBS007

@@ -1,0 +1,33 @@
+"""Seeded QBS007 violations: packed tables widened on the host."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def host_widen(ctx, packed):
+    a = ctx.label_dist.astype(jnp.int32)       # line 8: fires
+    b = packed.meta_w[0].astype(np.int64)      # line 9: fires
+    c = ctx.meta_dist.astype("int32")          # line 10: fires
+    d = packed.lm_dist[0].astype(np.int32)     # line 11: fires
+    return a, b, c, d
+
+
+@jax.jit
+def widen_in_registers(label_dist, rows):
+    # OK: gathered packed rows widen inside the jit body
+    return label_dist[rows].astype(jnp.int32)
+
+
+def _impl(meta_dist):
+    return meta_dist.astype(jnp.int32)         # OK: wrapped by jax.jit below
+
+
+widened = jax.jit(_impl)
+
+
+def unrelated(x):
+    return x.astype(np.int64)                  # OK: not a packed table
+
+
+def narrow(packed):
+    return packed.label_dist.astype(np.uint16)  # OK: stays packed

@@ -15,6 +15,12 @@ _SPEC = importlib.util.spec_from_file_location(
 bench_gate = importlib.util.module_from_spec(_SPEC)
 _SPEC.loader.exec_module(bench_gate)
 
+_RSPEC = importlib.util.spec_from_file_location(
+    "bench_run", Path(__file__).resolve().parent.parent
+    / "benchmarks" / "run.py")
+bench_run = importlib.util.module_from_spec(_RSPEC)
+_RSPEC.loader.exec_module(bench_run)
+
 
 def _write(path: Path, records: list[dict]) -> Path:
     with path.open("w") as f:
@@ -137,6 +143,56 @@ def test_latest_record_wins(tmp_path):
     base = bench_gate.load_latest(
         _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
     assert bench_gate.compare(base, cur, 0.25)[0] == []
+
+
+def _roofline_rec(frac: float, *, ts=1.0) -> dict:
+    return {"bench": "roofline", "ts": ts, "scale": 0.25, "rows": [
+        {"kernel": "bitmap_expand", "shape": "64x512",
+         "roofline_frac": frac, "wall_us": 900.0, "ideal_us": 600.0},
+    ]}
+
+
+def test_roofline_rows_gate_on_absolute_floor_not_relative(tmp_path):
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_roofline_rec(0.60)]))
+    # a 10x relative drop that stays above the floor passes — the rule is
+    # absolute, unlike the qps percentage rule
+    ok = bench_gate.load_latest(
+        _write(tmp_path / "ok.json", [_roofline_rec(0.06)]))
+    regs, _ = bench_gate.compare(base, ok, 0.25, frac_floor=0.01)
+    assert regs == []
+    # a collapse below the floor fails regardless of the baseline value
+    bad = bench_gate.load_latest(
+        _write(tmp_path / "bad.json", [_roofline_rec(0.004)]))
+    regs, _ = bench_gate.compare(base, bad, 0.25, frac_floor=0.01)
+    assert [r["metric"] for r in regs] == ["roofline_frac"]
+    assert regs[0]["current"] == pytest.approx(0.004)
+
+
+def test_roofline_rows_never_hit_tracked_metric_rule(tmp_path):
+    # wall_us/ideal_us are floats (out of the row key) and the row carries
+    # no tracked metric, so only the floor rule can ever fire on it
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_roofline_rec(0.5)]))
+    cur_rec = _roofline_rec(0.5)
+    cur_rec["rows"][0]["wall_us"] = 90000.0     # 100x slower wall clock
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, _ = bench_gate.compare(base, cur, 0.25, frac_floor=0.01)
+    assert regs == []
+
+
+def test_prune_bench_keeps_last_n_per_key(tmp_path):
+    path = _write(tmp_path / "b.json", [
+        _rec(1.0, 1.0, ts=1.0), _rec(2.0, 2.0, ts=2.0),
+        _rec(3.0, 3.0, ts=3.0),
+        _rec(9.0, 9.0, bench="other", ts=1.0),
+    ])
+    assert bench_run.prune_bench(path, 2) == 1
+    recs = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [r["ts"] for r in recs] == [2.0, 3.0, 1.0]
+    # the gate's view (latest record per key) is unchanged by pruning
+    assert bench_gate.load_latest(path)[("b", 0.25)]["ts"] == 3.0
+    assert bench_run.prune_bench(path, 2) == 0   # idempotent
 
 
 def test_main_exit_codes_and_refresh(tmp_path):

@@ -1,0 +1,214 @@
+"""Packed-layout invariants (core.packing, DESIGN.md §10): exact
+pack/widen round-trips, the uint8 -> uint16 escape hatch and sentinel
+boundary, bit-packed reachability words + the packed Pallas expand
+kernel, packed-index bit-identity against the numpy oracle across
+frontier backends, and the packed ResultCache encodings with byte-based
+capacity accounting."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from helpers.serving_oracle import assert_bit_identical
+
+from repro.core import (
+    INF,
+    QbSIndex,
+    build_labelling,
+    gnp_random_graph,
+    grid_graph,
+    pack_bits,
+    unpack_bits,
+    widen_dist,
+)
+from repro.core.packing import (
+    choose_pack_dtype,
+    pack_dist,
+    pack_labelling,
+    packed_size_bytes,
+    sentinel_of,
+)
+from repro.core.sketch import compute_sketch_batch
+from repro.kernels.frontier import bitmap_expand, bitmap_expand_packed
+from repro.kernels.minplus import minplus
+from repro.serving.service import ResultCache, _pack_result, _unpack_result
+
+
+# ------------------------------------------------------ pack/widen dtypes
+
+
+def test_pack_widen_round_trip_is_exact():
+    rng = np.random.default_rng(0)
+    for dtype, hi in ((np.uint8, 254), (np.uint16, 65534)):
+        a = rng.integers(0, hi + 1, size=(40, 7)).astype(np.int32)
+        a[rng.random((40, 7)) < 0.3] = INF
+        a[0, 0] = hi          # pin the dtype boundary into the sample
+        a[0, 1] = INF
+        packed = pack_dist(a, dtype)
+        assert packed.dtype == dtype
+        assert np.array_equal(np.asarray(widen_dist(packed)), a)
+
+
+def test_choose_pack_dtype_escape_hatch_at_sentinel():
+    a = np.array([[0, 254, INF]], np.int32)
+    b = np.array([[0, 255, INF]], np.int32)
+    assert choose_pack_dtype(a) == np.uint8          # 254 < sentinel 255
+    assert choose_pack_dtype(b) == np.uint16         # 255 collides -> promote
+    assert choose_pack_dtype(a, b) == np.uint16      # max across all tables
+    assert choose_pack_dtype(a, None, b) == np.uint16  # optional tables skip
+    with pytest.raises(ValueError, match="sentinel"):
+        choose_pack_dtype(np.array([sentinel_of(np.uint16)], np.int32))
+
+
+def test_pack_dist_refuses_sentinel_collision():
+    with pytest.raises(ValueError, match="sentinel"):
+        pack_dist(np.array([255], np.int32), np.uint8)
+
+
+def test_widen_dist_signed_passthrough():
+    a = jnp.asarray(np.array([0, 3, INF], np.int32))
+    out = widen_dist(a)
+    assert out.dtype == jnp.int32
+    assert np.array_equal(np.asarray(out), [0, 3, INF])
+
+
+def test_minplus_rejects_packed_unsigned_inputs():
+    a = jnp.zeros((4, 4), jnp.uint8)
+    with pytest.raises(ValueError, match="widen"):
+        minplus(a, a)
+
+
+# ------------------------------------------------- escape hatch end-to-end
+
+
+def test_high_diameter_path_promotes_to_uint16_and_stays_exact():
+    # path of 300 vertices, landmarks at the ends: label distances reach
+    # 298 > 254, so the build must take the uint16 escape hatch
+    g = grid_graph(1, 300)
+    scheme = build_labelling(g, np.array([0, 299], np.int32), max_levels=400)
+    packed = scheme.packed()
+    assert packed.dtype == np.uint16
+    assert packed.sentinel == sentinel_of(np.uint16)
+    assert np.array_equal(np.asarray(widen_dist(packed.label_dist)),
+                          np.asarray(scheme.label_dist))
+
+    idx = QbSIndex(g, scheme, chunk=8)
+    assert idx.packed.dtype == np.uint16
+    us = np.array([0, 10, 150, 299, 42], np.int32)
+    vs = np.array([299, 290, 150, 0, 257], np.int32)
+    assert_bit_identical(g, idx.query_batch(us, vs), us, vs)
+
+
+def test_low_diameter_graph_packs_uint8():
+    g = gnp_random_graph(80, 3.0, seed=5)
+    idx = QbSIndex.build(g, n_landmarks=8, chunk=8)
+    s = packed_size_bytes(idx.packed)
+    assert s["dtype"] == "uint8"
+    assert s["ratio"] == 4.0                 # the acceptance floor is 3.5x
+    assert s["int32_bytes"] == idx.packed.nbytes * 4
+
+
+# ----------------------------------------------- packed pipeline identity
+
+
+@pytest.mark.parametrize("backend", ["segment", "csr", "hybrid"])
+def test_packed_index_bit_identical_to_oracle(backend):
+    g = gnp_random_graph(60, 3.0, seed=3)
+    idx = QbSIndex.build(g, n_landmarks=6, chunk=8, backend=backend)
+    assert idx.packed.dtype == np.uint8
+    assert idx.ctx.label_dist.dtype == idx.packed.dtype  # one HBM copy
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, g.n_vertices, 25).astype(np.int32)
+    vs = rng.integers(0, g.n_vertices, 25).astype(np.int32)
+    assert_bit_identical(g, idx.query_batch(us, vs), us, vs)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_packed_sketch_matches_unpacked(use_pallas):
+    g = gnp_random_graph(50, 3.2, seed=7)
+    idx = QbSIndex.build(g, n_landmarks=6, chunk=8)
+    scheme, packed = idx.scheme, idx.packed
+    rng = np.random.default_rng(2)
+    us = jnp.asarray(rng.integers(0, g.n_vertices, 16), jnp.int32)
+    vs = jnp.asarray(rng.integers(0, g.n_vertices, 16), jnp.int32)
+    ref = compute_sketch_batch(
+        scheme.label_dist[us], scheme.label_dist[vs],
+        scheme.meta_w, scheme.meta_dist, use_pallas=use_pallas)
+    got = compute_sketch_batch(
+        packed.label_dist[us], packed.label_dist[vs],
+        packed.meta_w, packed.meta_dist, use_pallas=use_pallas)
+    for r, g_ in zip(ref, got):
+        assert np.array_equal(np.asarray(r), np.asarray(g_))
+
+
+# ----------------------------------------------------- bit-packed words
+
+
+def test_pack_bits_round_trip_ragged_widths():
+    rng = np.random.default_rng(4)
+    for n in (1, 31, 32, 33, 100, 256):
+        x = rng.random((5, n)) < 0.4
+        words = pack_bits(jnp.asarray(x))
+        assert words.shape == (5, -(-n // 32))
+        assert words.dtype == jnp.uint32
+        assert np.array_equal(np.asarray(unpack_bits(words, n)), x)
+
+
+def test_bitmap_expand_packed_matches_dense():
+    rng = np.random.default_rng(6)
+    f = rng.random((17, 70)) < 0.3
+    adj = rng.random((70, 90)) < 0.1
+    dense = bitmap_expand(jnp.asarray(f), jnp.asarray(adj))
+    packed = bitmap_expand_packed(
+        jnp.asarray(f), pack_bits(jnp.asarray(adj)), n_cols=90)
+    assert np.array_equal(np.asarray(dense), np.asarray(packed))
+
+
+# ----------------------------------------------------- packed ResultCache
+
+
+def test_pack_result_delta_and_raw_round_trip():
+    # sorted flatnonzero-style ids with small gaps -> delta encoding
+    eids = np.array([5, 6, 10, 60000], np.int32)  # max gap 59990 < 2^16
+    entry = _pack_result((7, eids))
+    assert entry[2][0] == "delta"
+    assert entry[0] == 3 * 2 + 6             # 3 uint16 gaps + anchor + dist
+    d, out = _unpack_result(entry)
+    assert d == 7 and out.dtype == np.int32
+    assert np.array_equal(out, eids)
+    assert not out.flags.writeable
+
+    # a gap >= 2^16 cannot delta-encode
+    wide = np.array([0, 1 << 17], np.int32)
+    entry = _pack_result((3, wide))
+    assert entry[2][0] == "raw"
+    assert entry[0] == wide.nbytes + 2
+    d, out = _unpack_result(entry)
+    assert d == 3 and np.array_equal(out, wide)
+
+    # empty edge lists (trivial/disconnected lanes) stay raw and tiny
+    empty = np.zeros((0,), np.int32)
+    entry = _pack_result((0, empty))
+    assert entry[2][0] == "raw" and entry[0] == 2
+    assert _unpack_result(entry)[1].size == 0
+
+
+def test_result_cache_byte_accounting_and_byte_eviction():
+    def val(n):
+        return (n, np.arange(n, dtype=np.int32))   # delta: (n-1)*2 + 6 bytes
+
+    c = ResultCache(100, capacity_bytes=40)
+    c.put((0, 0), val(8))                    # 20 bytes
+    assert c.bytes == 20
+    c.put((1, 1), val(8))                    # 40 bytes total
+    assert c.bytes == 40 and len(c) == 2
+    c.put((2, 2), val(8))                    # 60 > 40 -> evict LRU (0, 0)
+    assert c.bytes == 40 and len(c) == 2
+    assert (0, 0) not in c and c.get((0, 0)) is None
+    # re-put replaces the resident bytes, never double-counts
+    c.put((1, 1), val(2))                    # 20 + 8
+    assert c.bytes == 28 and len(c) == 2
+    got = c.get((1, 1))
+    assert got[0] == 2 and np.array_equal(got[1], [0, 1])

@@ -78,6 +78,32 @@ def test_qbs006_cache_insert_bypass():
     assert sorted(f.line for f in findings) == [12, 13, 17]
 
 
+def test_qbs007_host_widening_of_packed_tables():
+    findings = _lint(FIXTURES / "qbs007_bad.py")
+    assert _rules(findings) == ["QBS007"]
+    assert sorted(f.line for f in findings) == [8, 9, 10, 11]
+
+
+def test_qbs007_serving_int64_scope_and_suppression():
+    findings = _lint(FIXTURES / "qbs007")
+    assert _rules(findings) == ["QBS007"]
+    assert sorted(f.line for f in findings) == [6, 10]
+    assert all(f.path.endswith("bad_int64.py") for f in findings)
+
+
+def test_qbs007_jit_bodies_are_exempt():
+    src = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "@jax.jit\n"
+        "def widen(label_dist, rows):\n"
+        "    return label_dist[rows].astype(jnp.int32)\n"
+    )
+    assert lint_source("widen.py", src) == []
+
+
 # ------------------------------------------------------------- negatives
 
 
@@ -118,6 +144,8 @@ def test_repo_src_tree_is_clean():
         "qbs004_bad.py",
         "qbs005_bad.py",
         "qbs006_bad.py",
+        "qbs007_bad.py",
+        "qbs007",
     ],
 )
 def test_cli_nonzero_on_each_seeded_violation(fixture):
@@ -143,9 +171,9 @@ def test_cli_rule_filter_and_json_output():
     assert {f["rule"] for f in payload["findings"]} == {"QBS005"}
 
 
-def test_cli_list_rules_names_all_six():
+def test_cli_list_rules_names_all_seven():
     proc = _cli("--list-rules")
     assert proc.returncode == 0
     for rule in ALL_RULES:
         assert rule.id in proc.stdout
-    assert len(ALL_RULES) == 6
+    assert len(ALL_RULES) == 7

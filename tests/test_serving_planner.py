@@ -181,8 +181,16 @@ def test_chunk_padded_edge_cases():
 
 
 def _v(i):
-    # the cache is value-agnostic; plain ints keep the assertions scalar
-    return i
+    # a real (dist, edge_ids) value: the cache packs values internally
+    # (delta-uint16 edge gaps + byte accounting), so every assertion here
+    # also exercises the pack/decode round-trip
+    return (i, np.arange(i % 4, dtype=np.int32) * 3)
+
+
+def _veq(got, i):
+    want = _v(i)
+    return (got is not None and got[0] == want[0]
+            and np.array_equal(got[1], want[1]))
 
 
 def test_result_cache_capacity_zero_and_one():
@@ -196,19 +204,19 @@ def test_result_cache_capacity_zero_and_one():
     c.put((1, 2), _v(1))
     c.put((3, 4), _v(2))                    # evicts the only slot
     assert len(c) == 1
-    assert c.get((1, 2)) is None and c.get((3, 4)) == _v(2)
+    assert c.get((1, 2)) is None and _veq(c.get((3, 4)), 2)
 
 
 def test_result_cache_lru_eviction_order():
     c = ResultCache(2)
     c.put((0, 1), _v(1))
     c.put((0, 2), _v(2))
-    assert c.get((0, 1)) == _v(1)           # refresh (0, 1)'s recency
+    assert _veq(c.get((0, 1)), 1)           # refresh (0, 1)'s recency
     c.put((0, 3), _v(3))                    # evicts (0, 2), the LRU entry
     assert c.get((0, 2)) is None
-    assert c.get((0, 1)) == _v(1) and c.get((0, 3)) == _v(3)
+    assert _veq(c.get((0, 1)), 1) and _veq(c.get((0, 3)), 3)
     c.put((0, 1), _v(9))                    # re-put refreshes, no growth
-    assert len(c) == 2 and c.get((0, 1)) == _v(9)
+    assert len(c) == 2 and _veq(c.get((0, 1)), 9)
 
 
 def test_result_cache_protected_slots():
@@ -219,25 +227,25 @@ def test_result_cache_protected_slots():
     for i in range(2, 7):                   # cold flood: 5 unprotected
         c.put((1, i), _v(i))
     assert len(c) == 4
-    assert c.get((0, 1)) == _v(1)           # survived the flood
+    assert _veq(c.get((0, 1)), 1)           # survived the flood
     assert c.get((1, 2)) is None            # cold LRU entries evicted
     # protected overflow demotes (LRU-first) into the unprotected tier
     c = ResultCache(4, protect=protect, protected_frac=0.5)
     for i in range(1, 4):
         c.put((0, i), _v(i))                # 3 protected > cap 2
     assert len(c) == 3
-    assert c.get((0, 1)) == _v(1)           # demoted, still resident
+    assert _veq(c.get((0, 1)), 1)           # demoted, still resident
     c.put((1, 9), _v(9))
     c.put((1, 10), _v(10))                  # overflow evicts demoted (0, 1)
     assert c.get((0, 1)) is None
-    assert c.get((0, 2)) == _v(2) and c.get((0, 3)) == _v(3)
+    assert _veq(c.get((0, 2)), 2) and _veq(c.get((0, 3)), 3)
     # fully-protected cache (frac=1.0) still bounds at capacity: overflow
     # demotes the protected LRU entry, which then evicts
     c = ResultCache(2, protect=lambda k: True, protected_frac=1.0)
     for i in range(1, 4):
         c.put((0, i), _v(i))
     assert len(c) == 2 and c.get((0, 1)) is None
-    assert c.get((0, 2)) == _v(2) and c.get((0, 3)) == _v(3)
+    assert _veq(c.get((0, 2)), 2) and _veq(c.get((0, 3)), 3)
 
 
 def test_round_chunk_to_shards():

@@ -1,4 +1,4 @@
-"""The six QbS repo-invariant rules (see DESIGN.md §9 for rationale).
+"""The seven QbS repo-invariant rules (see DESIGN.md §9 for rationale).
 
 Every rule is a pure function of one parsed module.  Shared machinery:
 ``_Aliases`` resolves local names through the file's imports (``import
@@ -513,6 +513,96 @@ class CacheInsertBypass(Rule):
             yield from self._visit(mod, child, class_stack, func_stack)
 
 
+# ---------------------------------------------------------------------------
+# QBS007 — packed tables never widen to >= 32 bits in host code
+# ---------------------------------------------------------------------------
+
+
+def _jit_spans(aliases: _Aliases, tree: ast.Module) -> list[tuple[int, int]]:
+    """Line spans of every jit context in the module (same collection rule
+    as QBS003: jit-decorated defs, ``jax.jit(fn)`` on a named def, and
+    ``jax.jit(lambda ...)``)."""
+    contexts: list[ast.AST] = []
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+            if _jit_decorated(aliases, node):
+                contexts.append(node)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit(aliases, node.func) \
+                and node.args:
+            wrapped = node.args[0]
+            if isinstance(wrapped, ast.Lambda):
+                contexts.append(wrapped)
+            elif isinstance(wrapped, ast.Name):
+                contexts.extend(defs_by_name.get(wrapped.id, []))
+    return [(c.lineno, getattr(c, "end_lineno", None) or c.lineno)
+            for c in contexts]
+
+
+class PackedWidenOnHost(Rule):
+    id = "QBS007"
+    summary = ("host-side widening of a packed label/cache table to >= 32 "
+               "bits — packed uint8/uint16 arrays only widen in registers "
+               "inside jit bodies (DESIGN.md §10); a resident int32 copy "
+               "forfeits the 4x label-bandwidth win")
+    # the packed-table field names (core.packing.PackedLabels and the
+    # QbSIndex attributes that alias them)
+    _PACKED_NAMES = {"label_dist", "meta_w", "meta_dist",
+                     "lm_dist", "_lm_dist"}
+    _WIDE = {"numpy.int32", "numpy.int64",
+             "jax.numpy.int32", "jax.numpy.int64"}
+    _WIDE_STRS = {"int32", "int64", "i4", "i8"}
+
+    @classmethod
+    def _is_packed_expr(cls, node: ast.AST) -> bool:
+        while isinstance(node, ast.Subscript):
+            node = node.value
+        d = _dotted(node)
+        if d is None:
+            return False
+        segs = d.split(".")
+        return segs[-1] in cls._PACKED_NAMES \
+            or any("packed" in s for s in segs)
+
+    def _is_wide_dtype(self, aliases: _Aliases, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value in self._WIDE_STRS
+        return aliases.resolve(node) in self._WIDE
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        aliases = _Aliases(mod.tree)
+        spans = _jit_spans(aliases, mod.tree)
+        in_serving = "/serving/" in f"/{mod.path}"
+
+        def in_jit(node: ast.AST) -> bool:
+            line = getattr(node, "lineno", 0)
+            return any(lo <= line <= hi for lo, hi in spans)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and self._is_wide_dtype(aliases, node.args[0]) \
+                    and self._is_packed_expr(node.func.value) \
+                    and not in_jit(node):
+                yield self.finding(
+                    mod, node, "packed table widened to >= int32 in host "
+                    "code; gather the packed rows and widen inside the jit "
+                    "body (core.packing.widen_dist) so the int32 copy "
+                    "lives in registers, not HBM")
+            elif in_serving and isinstance(node, ast.Attribute) \
+                    and aliases.resolve(node) == "numpy.int64" \
+                    and not in_jit(node):
+                yield self.finding(
+                    mod, node, "np.int64 on the serving path; the serving "
+                    "host tier is int32-audited (edge ids, cache values) — "
+                    "if 64 bits are genuinely required, say why and add "
+                    "'# qbslint: disable=QBS007'")
+
+
 ALL_RULES = (ShardMapViaCompat(), WallClockInServing(), HostSyncInJit(),
-             JitInHotPath(), LockDiscipline(), CacheInsertBypass())
+             JitInHotPath(), LockDiscipline(), CacheInsertBypass(),
+             PackedWidenOnHost())
 RULES_BY_ID = {r.id: r for r in ALL_RULES}
