@@ -8,6 +8,14 @@ Emits the standard ``name,us_per_call,derived`` CSV rows (derived = speedup
 vs segment on the same graph/width) and appends one JSON record per
 invocation to the BENCH.json trajectory at the repo root, so successive
 PRs accumulate a comparable relay-performance history.
+
+On top of the fixed-config comparison, a config sweep picks the best
+``n_hubs`` for the hybrid backend and the best ``block_size`` for the
+CSR backend per graph (at the labelling width K=20) and records one
+``config="hybrid-best"`` / ``config="csr-best"`` row each.  The winning
+config values ride along as float columns (``best_n_hubs`` /
+``best_block_size``) so they stay out of the gate's row key — the gate
+tracks the best-achievable latency, not which knob achieved it.
 """
 from __future__ import annotations
 
@@ -28,6 +36,12 @@ BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH.json"
 # relay widths: K=1 is the online bidirectional search, K=20 the batched
 # labelling program (|R| simultaneous BFSs)
 WIDTHS = (1, 20)
+
+# config sweeps (best-of per graph at K=20): hybrid hub-block sizes and
+# CSR edge-block sizes (0 = unblocked single pass)
+HUB_SWEEP = (64, 128, 256, 512, 1024)
+BLOCK_SWEEP = (0, 1024, 4096, 16384)
+SWEEP_K = 20
 
 
 def _graphs(scale: float):
@@ -77,6 +91,32 @@ def run(scale: float = 1.0, n_hubs: int = 512, **_) -> list[tuple]:
                     "us_per_call": dt * 1e6, "speedup_vs_segment": speedup,
                     "V": g.n_vertices, "E": g.n_edges,
                 })
+        # --- best-config sweeps at the labelling width ------------------
+        vals = jnp.asarray(rng.random((SWEEP_K, g.n_vertices)) < 0.1)
+        base = _time_interleaved(
+            {"segment": jax.jit(engines["segment"].relay)}, # qbslint: disable=QBS004
+            vals)["segment"]
+        hubs = sorted({min(h, g.n_vertices // 4) for h in HUB_SWEEP})
+        hyb = {h: jax.jit(make_relay(g, backend="hybrid",  # qbslint: disable=QBS004
+                                     n_hubs=h).relay)
+               for h in hubs}
+        csr = {b: jax.jit(make_relay(g, backend="csr",     # qbslint: disable=QBS004
+                                     block_size=b).relay)
+               for b in BLOCK_SWEEP}
+        for cfg, key, fns in (("hybrid-best", "best_n_hubs", hyb),
+                              ("csr-best", "best_block_size", csr)):
+            best = _time_interleaved(
+                {str(c): fn for c, fn in fns.items()}, vals)
+            c, dt = min(best.items(), key=lambda kv: kv[1])
+            speedup = base / max(dt, 1e-12)
+            rows.append((f"relay/{gname}/K{SWEEP_K}/{cfg}", dt * 1e6,
+                         f"{key}={c};speedup={speedup:.3f}"))
+            record["rows"].append({
+                "graph": gname, "k": SWEEP_K, "config": cfg,
+                "us_per_call": dt * 1e6, key: float(c),
+                "speedup_vs_segment": speedup,
+                "V": g.n_vertices, "E": g.n_edges,
+            })
     with BENCH_PATH.open("a") as f:
         f.write(json.dumps(record) + "\n")
     return rows

@@ -70,6 +70,7 @@ def main() -> None:
         query_time,
         roofline,
         serving_throughput,
+        sharded_memory,
         sketch_kernel,
         streaming_admission,
     )
@@ -89,6 +90,7 @@ def main() -> None:
         (streaming_admission, {}),
         (qos_scheduler, {}),
         (roofline, {}),
+        (sharded_memory, {}),
     ):
         t = time.time()
         emit(mod.run(scale=scale, **kw))

@@ -67,8 +67,8 @@ def _row_key(row: dict) -> tuple:
 
 
 def compare(baseline: dict, current: dict, threshold: float,
-            min_us: float = 50.0,
-            frac_floor: float = 0.01) -> tuple[list, list]:
+            min_us: float = 50.0, frac_floor: float = 0.01,
+            shard_frac_ceiling: float = 0.25) -> tuple[list, list]:
     """Compare two ``load_latest`` maps.  Returns ``(regressions, notes)``
     where each regression is a dict with the offending row key, metric,
     baseline/current values and the ratio.
@@ -83,7 +83,14 @@ def compare(baseline: dict, current: dict, threshold: float,
     achieved fraction already normalizes out machine speed, so the gate
     fails only when the current fraction collapses below ``frac_floor``
     — a kernel falling off its roofline — never on run-to-run wiggle of
-    an otherwise healthy fraction."""
+    an otherwise healthy fraction.
+
+    Symmetrically, rows carrying ``per_device_frac``
+    (``benchmarks/sharded_memory.py``) are gated by an absolute
+    *ceiling*: the vertex-sharded index must keep per-device label+CSR
+    bytes under ``shard_frac_ceiling`` of the replicated footprint
+    (linear-scaling floor on an 8-way mesh — DESIGN.md §11); the gate
+    fails only when the fraction climbs above the ceiling."""
     regressions, notes = [], []
     for rec_key, base_rec in sorted(baseline.items(), key=str):
         cur_rec = current.get(rec_key)
@@ -114,6 +121,16 @@ def compare(baseline: dict, current: dict, threshold: float,
                         "ratio": frac / max(frac_floor, 1e-12),
                     })
                 continue   # absolute-floor rows never hit the relative rule
+            if "per_device_frac" in cur_row:
+                frac = float(cur_row["per_device_frac"])
+                if frac > shard_frac_ceiling:
+                    regressions.append({
+                        "bench": rec_key[0], "scale": rec_key[1],
+                        "row": dict(key), "metric": "per_device_frac",
+                        "baseline": shard_frac_ceiling, "current": frac,
+                        "ratio": frac / max(shard_frac_ceiling, 1e-12),
+                    })
+                continue   # absolute-ceiling rows likewise
             for metric, sense in TRACKED.items():
                 if metric not in base_row or metric not in cur_row:
                     continue
@@ -145,6 +162,11 @@ def main(argv=None) -> int:
     ap.add_argument("--frac-floor", type=float, default=0.01,
                     help="absolute floor for roofline_frac rows (fail iff "
                          "current < floor; default 0.01)")
+    ap.add_argument("--shard-frac-ceiling", type=float, default=0.25,
+                    help="absolute ceiling for per_device_frac rows from "
+                         "the vertex-sharded index (fail iff current > "
+                         "ceiling; default 0.25 = linear scaling on >= 4 "
+                         "effective shards)")
     ap.add_argument("--scale", type=float, default=None,
                     help="only gate/refresh records at this scale (CI "
                          "pins 0.25; default: all)")
@@ -167,7 +189,8 @@ def main(argv=None) -> int:
         return 0
     regressions, notes = compare(baseline, current, args.threshold,
                                  min_us=args.min_us,
-                                 frac_floor=args.frac_floor)
+                                 frac_floor=args.frac_floor,
+                                 shard_frac_ceiling=args.shard_frac_ceiling)
     for note in notes:
         print(f"bench gate: {note}")
     if regressions:

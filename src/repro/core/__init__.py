@@ -22,8 +22,10 @@ from .packing import (
     unpack_bits,
     widen_dist,
 )
+from .distributed import ShardedLabels, distributed_build_sharded
 from .qbs import QbSIndex, SPGResult
 from .search import Query, SearchContext, SearchResult, guided_search, make_search_context
+from .sharded import ShardedIndex
 from .sketch import SketchBatch, compute_sketch_batch, d_top_only
 
 __all__ = [
@@ -54,6 +56,9 @@ __all__ = [
     "unpack_bits",
     "widen_dist",
     "QbSIndex",
+    "ShardedIndex",
+    "ShardedLabels",
+    "distributed_build_sharded",
     "SPGResult",
     "Query",
     "SearchContext",

@@ -18,8 +18,12 @@ Mapping of the paper onto a TPU mesh (DESIGN.md §2, §7):
 
 * **Serving** (online): queries are embarrassingly parallel — the batch is
   sharded across the mesh, labels and the sparsified graph are replicated
-  within a pod.  Billion-vertex variants (labels vertex-sharded) are
-  exercised by the dry-run configs in ``repro.launch.dryrun``.
+  within a pod (``make_serve_step``).  Billion-vertex variants keep the
+  labels *vertex-sharded*: ``distributed_build_sharded`` finishes the
+  labelling on-device so the packed tables are born sharded
+  (``ShardedLabels``, one ``jax.sharding.NamedSharding`` block per
+  device, never gathered to host), and ``core.sharded.ShardedIndex``
+  serves every lane from those shards (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -37,7 +41,7 @@ from .graph import INF, Graph
 from .labelling import LabellingScheme, meta_apsp
 # Bit-packed word layout shared with the hybrid frontier's hub block; the
 # canonical definitions live in core.packing (DESIGN.md §10).
-from .packing import PackedLabels
+from .packing import PackedLabels, choose_pack_dtype, pack_dist, sentinel_of
 from .packing import pack_bits as _pack_bits
 from .packing import unpack_bits as _unpack_bits
 from .search import Query, SearchContext, guided_search
@@ -52,6 +56,10 @@ class EdgePartition(NamedTuple):
     vstart: np.ndarray     # (S,) int32 first vertex of each shard's block
     v_loc: int             # max local block size (padded)
     e_max: int
+    eid: np.ndarray | None = None  # (S, E_max) int32 global edge-slot ids
+    #                                (pad: n_edges) — lets sharded serving
+    #                                scatter local certificates back into
+    #                                the canonical (B, E) edge mask
 
 
 def partition_edges(graph: Graph, n_shards: int) -> EdgePartition:
@@ -84,11 +92,14 @@ def partition_edges(graph: Graph, n_shards: int) -> EdgePartition:
     e_max = max(e_max, 1)
     src_sh = np.zeros((n_shards, e_max), np.int32)
     dst_sh = np.full((n_shards, e_max), v_loc, np.int32)  # pad row = dropped
+    eid_sh = np.full((n_shards, e_max), e, np.int32)      # pad -> dropped col
     for s in range(n_shards):
         a, b = starts[s], ends[s]
         src_sh[s, : b - a] = ssorted[a:b]
         dst_sh[s, : b - a] = dsorted[a:b] - vstart[s]
-    return EdgePartition(src_sh, dst_sh, vstart.astype(np.int32), v_loc, e_max)
+        eid_sh[s, : b - a] = order[a:b]
+    return EdgePartition(src_sh, dst_sh, vstart.astype(np.int32), v_loc,
+                         e_max, eid_sh)
 
 
 
@@ -358,7 +369,7 @@ def make_labelling_step_pull(
     )
 
 
-def distributed_build_labelling(
+def distributed_build_labelling(  # qbslint: host-boundary
     graph: Graph,
     landmarks: np.ndarray,
     mesh: Mesh,
@@ -436,6 +447,256 @@ def distributed_build_labelling(
         meta_w=jnp.asarray(meta_w),
         meta_dist=meta_apsp(jnp.asarray(meta_w)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Born-sharded labelling: packed tables that never leave the mesh
+# ---------------------------------------------------------------------------
+
+
+class ShardedLabels(NamedTuple):
+    """Packed label tables of one index, vertex-sharded over a mesh.
+
+    Device fields carry a ``jax.sharding.NamedSharding``: one contiguous
+    vertex block per device along the leading S axis.  The (R, R) meta
+    tables and the landmark list are replicated — they are the sketch's
+    landmark-landmark block, tiny by design (DESIGN.md §11).  Host fields
+    hold partition *geometry* only, never table contents: the full (V, R)
+    table is never materialized anywhere.
+    """
+
+    labels_sh: jax.Array   # (S, v_loc, R) packed, vertex-sharded
+    lm_sh: jax.Array       # (S, R, v_loc) packed, vertex-sharded
+    meta_w: jax.Array      # (R, R) packed, replicated
+    meta_dist: jax.Array   # (R, R) packed, replicated (APSP closure)
+    landmarks: jax.Array   # (R,) int32, replicated
+    vstart: np.ndarray     # (S,) int32 first vertex of each block
+    nloc: np.ndarray       # (S,) int32 real (un-padded) block sizes
+    v_loc: int             # padded block size (labels_sh.shape[1])
+    n_vertices: int
+
+    @property
+    def n_landmarks(self) -> int:
+        return int(self.labels_sh.shape[-1])
+
+    @property
+    def pack_dtype(self) -> np.dtype:
+        return np.dtype(self.labels_sh.dtype)
+
+    @property
+    def sentinel(self) -> int:
+        return sentinel_of(self.labels_sh.dtype)
+
+    def per_device_label_bytes(self) -> int:
+        """Packed label bytes resident on ONE device: its (v_loc, R) label
+        block + (R, v_loc) landmark-distance block + the replicated meta
+        pair.  The sharding acceptance gate (benchmarks/sharded_memory.py)
+        compares this against ``PackedLabels.nbytes``."""
+        item = self.pack_dtype.itemsize
+        r = self.n_landmarks
+        return 2 * self.v_loc * r * item + 2 * r * r * item
+
+
+def make_sharded_finalize(
+    mesh: Mesh,
+    *,
+    n_vertices: int,
+    v_loc: int,
+    n_landmarks: int,
+    axis_names: tuple[str, ...] | None = None,
+):
+    """Device program A of the born-sharded build: raw labelling state
+    (depth, reach_L) -> int32 label blocks plus the replicated
+    landmark-landmark readouts, all still on the mesh.
+
+    Mirrors ``distributed_build_labelling``'s host re-assembly formulas
+    exactly, per shard: ``label32 = where(reach & ~is_lm & real, depth,
+    INF).T`` (pad rows forced INF), and the (R, R) ``at_land`` /
+    ``l_at_land`` blocks read from each landmark's *owning* shard
+    (owned-else-neutral + pmin/pmax, so the outputs are replicated).
+    """
+    axis_names = axis_names or tuple(mesh.axis_names)
+    vloc = v_loc
+    spec_e = P(axis_names)
+    rep = P()
+
+    def body(depth_sh, reach_sh, vstart_sh, nloc_sh, landmarks_j):
+        depth = depth_sh[0]          # (R, vloc) int32
+        reach = reach_sh[0]          # (R, vloc) bool
+        vst = vstart_sh[0]
+        n_loc = nloc_sh[0]
+        local_ids = vst + jnp.arange(vloc, dtype=jnp.int32)
+        real = jnp.arange(vloc, dtype=jnp.int32) < n_loc
+        is_lm_loc = (local_ids[:, None] == landmarks_j[None, :]).any(axis=1)
+        valid = reach & (~is_lm_loc & real)[None, :]
+        label32 = jnp.where(valid, depth, INF).T       # (vloc, R)
+
+        # landmark-landmark readout from the exact owner (each landmark is
+        # claimed by exactly one shard, so owned-else-neutral + pmin/pmax
+        # reconstructs depth_full[:, landmarks] bit-for-bit)
+        lm_local = landmarks_j - vst
+        own = (landmarks_j >= vst) & (landmarks_j < vst + n_loc)
+        idx = jnp.clip(lm_local, 0, vloc - 1)
+        at_land = jnp.where(own[None, :], depth[:, idx], INF)        # (R, R)
+        at_land = jax.lax.pmin(at_land, axis_names)
+        l_at_land = jnp.where(own[None, :], reach[:, idx], False)
+        l_at_land = jax.lax.pmax(
+            l_at_land.astype(jnp.int32), axis_names) > 0
+        return label32[None], at_land, l_at_land
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, spec_e, rep),
+            out_specs=(spec_e, rep, rep),
+        )
+    )
+
+
+def make_sharded_lm_table(
+    mesh: Mesh,
+    *,
+    n_vertices: int,
+    v_loc: int,
+    n_landmarks: int,
+    axis_names: tuple[str, ...] | None = None,
+):
+    """Device program B: per-shard (R, v_loc) exact vertex-to-landmark
+    distances from the local int32 label block + the replicated meta APSP
+    — the vertex-sharded twin of ``qbs._dists_to_landmark_batch``,
+    bit-identical on real rows (pad rows are INF).  Also emits the global
+    max finite entry across label + lm tables (pmax-replicated scalar) so
+    the host can run the same pack-dtype ladder as ``choose_pack_dtype``
+    without ever gathering a table.
+    """
+    axis_names = axis_names or tuple(mesh.axis_names)
+    vloc = v_loc
+    spec_e = P(axis_names)
+    rep = P()
+
+    def body(label_sh, vstart_sh, nloc_sh, landmarks_j, meta_dist32):
+        lab = label_sh[0]            # (vloc, R) int32
+        vst = vstart_sh[0]
+        n_loc = nloc_sh[0]
+        # base[x, r] = min_i lab[x, i] + meta_dist[i, r]  (non-landmark rows)
+        base = jnp.min(lab[:, :, None] + meta_dist32[None, :, :], axis=1)
+        local_ids = vst + jnp.arange(vloc, dtype=jnp.int32)
+        eqs = local_ids[:, None] == landmarks_j[None, :]
+        is_lm = eqs.any(axis=1)
+        lid_loc = jnp.argmax(eqs, axis=1)              # 0 where not landmark
+        at_lm = meta_dist32[lid_loc]                   # (vloc, R); unused rows
+        lm = jnp.minimum(jnp.where(is_lm[:, None], at_lm, base), INF)
+        real = (jnp.arange(vloc, dtype=jnp.int32) < n_loc)[:, None]
+        lm = jnp.where(real, lm, INF).astype(jnp.int32)
+        mx = jnp.maximum(
+            jnp.max(jnp.where(lab < INF, lab, -1)),
+            jnp.max(jnp.where(lm < INF, lm, -1)),
+        )
+        mx = jax.lax.pmax(mx, axis_names)
+        return lm.T[None], mx
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, rep, rep),
+            out_specs=(spec_e, rep),
+        )
+    )
+
+
+@partial(jax.jit, static_argnames=("sentinel", "dtype"))
+def _pack_dist_device(a, *, sentinel: int, dtype: str):
+    """Elementwise sentinel-encode on device; jitted so XLA carries the
+    input's NamedSharding onto the output — the packed table is *born*
+    sharded, never staged through host (``pack_dist`` is its host twin)."""
+    return jnp.where(a >= INF, sentinel, a).astype(dtype)
+
+
+def distributed_build_sharded(  # qbslint: host-boundary
+    graph: Graph,
+    landmarks: np.ndarray,
+    mesh: Mesh,
+    *,
+    axis_names: tuple[str, ...] | None = None,
+    frontier_mode: str = "bitmap",
+    max_levels: int = 64,
+) -> tuple[ShardedLabels, EdgePartition]:
+    """Edge-sharded Algorithm 2 whose packed tables are *born*
+    vertex-sharded: the labelling finishes on-device (finalize + lm-table
+    shard_map programs) and only the (R, R) landmark-landmark block ever
+    crosses to host — to run ``meta_apsp`` and the pack-dtype ladder.
+    Exact: packs the same values ``distributed_build_labelling`` +
+    ``pack_labelling`` would, per block (the bit-identity is pinned by
+    tests/test_sharded_index.py).  Returns ``(ShardedLabels,
+    EdgePartition)`` — the partition doubles as the serving CSR layout
+    (``core.sharded.ShardedIndex``)."""
+    axis_names = axis_names or tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    part = partition_edges(graph, n_shards)
+    v = graph.n_vertices
+    r = int(np.asarray(landmarks).shape[0])
+    landmarks_j = jnp.asarray(landmarks, jnp.int32)
+    vend = np.concatenate([part.vstart[1:], [v]])
+    nloc = (vend - part.vstart).astype(np.int32)
+
+    step = make_labelling_step(
+        mesh, n_vertices=v, v_loc=part.v_loc, e_max=part.e_max,
+        n_landmarks=r, axis_names=axis_names, frontier_mode=frontier_mode,
+        max_levels=max_levels,
+    )
+    depth_sh, reach_sh = step(
+        jnp.asarray(part.src), jnp.asarray(part.dst_local),
+        jnp.asarray(part.vstart), landmarks_j,
+    )
+
+    finalize = make_sharded_finalize(
+        mesh, n_vertices=v, v_loc=part.v_loc, n_landmarks=r,
+        axis_names=axis_names,
+    )
+    vstart_j = jnp.asarray(part.vstart)
+    nloc_j = jnp.asarray(nloc)
+    label32_sh, at_land, l_at_land = finalize(
+        depth_sh, reach_sh, vstart_j, nloc_j, landmarks_j)
+
+    # Host boundary: the (R, R) landmark block is the one sanctioned
+    # replicated readout (R^2 ints — bytes, not tables).
+    at_np = np.asarray(at_land)
+    l_np = np.asarray(l_at_land)
+    meta_w_np = np.where(l_np, at_np, INF)
+    np.fill_diagonal(meta_w_np, INF)
+    meta_w_np = np.minimum(meta_w_np, meta_w_np.T).astype(np.int32)
+    meta_dist32 = meta_apsp(jnp.asarray(meta_w_np))
+
+    lm_step = make_sharded_lm_table(
+        mesh, n_vertices=v, v_loc=part.v_loc, n_landmarks=r,
+        axis_names=axis_names,
+    )
+    lm32_sh, mx = lm_step(label32_sh, vstart_j, nloc_j, landmarks_j,
+                          meta_dist32)
+
+    # Same dtype ladder as choose_pack_dtype, fed by the pmax scalar
+    # instead of a gathered table.
+    md_np = np.asarray(meta_dist32)
+    dtype = choose_pack_dtype(
+        np.asarray([max(int(mx), 0)]), meta_w_np, md_np)
+    sent = sentinel_of(dtype)
+    labels_sh = _pack_dist_device(
+        label32_sh, sentinel=sent, dtype=np.dtype(dtype).name)
+    lm_sh = _pack_dist_device(
+        lm32_sh, sentinel=sent, dtype=np.dtype(dtype).name)
+    return ShardedLabels(
+        labels_sh=labels_sh,
+        lm_sh=lm_sh,
+        meta_w=pack_dist(meta_w_np, dtype),
+        meta_dist=pack_dist(md_np, dtype),
+        landmarks=landmarks_j,
+        vstart=part.vstart,
+        nloc=nloc,
+        v_loc=part.v_loc,
+        n_vertices=v,
+    ), part
 
 
 # ---------------------------------------------------------------------------

@@ -171,6 +171,8 @@ def _landmark_onesided_lanes(engine, lm_dist, src, dst, rev_edge,
 
 
 class QbSIndex:
+    is_sharded = False   # replicated tables; core.sharded.ShardedIndex flips it
+
     def __init__(self, graph: Graph, scheme: LabellingScheme, *,
                  max_levels: int = 512, max_chain: int = 512, chunk: int = 32,
                  use_pallas: bool = True, backend: str = "segment",
@@ -276,7 +278,20 @@ class QbSIndex:
 
     @classmethod
     def build(cls, graph: Graph, n_landmarks: int = 20,
-              landmarks: np.ndarray | None = None, **kw) -> "QbSIndex":
+              landmarks: np.ndarray | None = None, sharded=None, **kw):
+        """Build an index.  ``sharded=`` switches to the vertex-sharded
+        variant (``core.sharded.ShardedIndex``): pass a
+        ``jax.sharding.Mesh``, a device count, or ``True`` (all local
+        devices) — labels are then *born* sharded on that mesh and every
+        serving lane answers from the shards (DESIGN.md §11).  The
+        sharded index takes its own serving knobs (``max_levels``,
+        ``max_chain``, ``chunk``), not this class's backend/pallas ones."""
+        if sharded is not None and sharded is not False:
+            from .sharded import ShardedIndex
+            mesh = None if sharded is True else sharded
+            return ShardedIndex.build(
+                graph, n_landmarks=n_landmarks, landmarks=landmarks,
+                mesh=mesh, **kw)
         if landmarks is None:
             landmarks = select_landmarks(graph, n_landmarks)
         scheme = build_labelling(

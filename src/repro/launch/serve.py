@@ -3,6 +3,11 @@ and answer batched shortest-path-graph queries.
 
   PYTHONPATH=src python -m repro.launch.serve --graph ba --n 20000 \
       --landmarks 20 --queries 200
+
+``--shards N`` builds the vertex-sharded index instead (labels born
+sharded over an N-device mesh, every lane served from the shards —
+DESIGN.md §11); emulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -39,20 +44,38 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=100)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="build the vertex-sharded index over this many "
+                         "devices (0 = replicated single-device index)")
     args = ap.parse_args()
 
     g = build_graph(args.graph, args.n, args.seed)
     print(f"[serve] graph {args.graph}: V={g.n_vertices} E={g.n_edges // 2}")
 
     t0 = time.perf_counter()
-    idx = QbSIndex.build(g, n_landmarks=args.landmarks, chunk=args.chunk)
-    t1 = time.perf_counter()
-    sz = labelling_size_bytes(idx.scheme)
-    psz = packed_size_bytes(idx.packed)
-    print(f"[serve] labelling built in {t1 - t0:.2f}s; "
-          f"size(L)={sz['label_bytes'] / 1e6:.2f}MB meta_edges={sz['n_meta_edges']}")
-    print(f"[serve] packed tables: {psz['packed_bytes'] / 1e6:.2f}MB "
-          f"({psz['dtype']}, {psz['ratio']:.1f}x smaller than int32)")
+    if args.shards:
+        idx = QbSIndex.build(g, n_landmarks=args.landmarks,
+                             chunk=args.chunk, sharded=args.shards)
+        t1 = time.perf_counter()
+        info = idx.sharded_size_bytes()
+        print(f"[serve] sharded labelling built in {t1 - t0:.2f}s over "
+              f"{info['n_shards']} devices ({idx.labels.pack_dtype})")
+        print(f"[serve] per-device bytes: "
+              f"{info['per_device_bytes'] / 1e6:.2f}MB "
+              f"(labels {info['per_device_label_bytes'] / 1e6:.2f}MB + CSR "
+              f"{info['per_device_csr_bytes'] / 1e6:.2f}MB) = "
+              f"{info['per_device_frac']:.2f}x of the replicated "
+              f"{info['replicated_bytes'] / 1e6:.2f}MB")
+    else:
+        idx = QbSIndex.build(g, n_landmarks=args.landmarks, chunk=args.chunk)
+        t1 = time.perf_counter()
+        sz = labelling_size_bytes(idx.scheme)
+        psz = packed_size_bytes(idx.packed)
+        print(f"[serve] labelling built in {t1 - t0:.2f}s; "
+              f"size(L)={sz['label_bytes'] / 1e6:.2f}MB "
+              f"meta_edges={sz['n_meta_edges']}")
+        print(f"[serve] packed tables: {psz['packed_bytes'] / 1e6:.2f}MB "
+              f"({psz['dtype']}, {psz['ratio']:.1f}x smaller than int32)")
 
     rng = np.random.default_rng(args.seed)
     us = rng.integers(0, g.n_vertices, size=args.queries)

@@ -57,6 +57,12 @@ def make_spg_serve_step(index) -> Callable:
     entries; the pipeline returns garbage lanes for them) — route them to
     the vectorized landmark lane steps (``QbSIndex.landmark_pair_step`` /
     ``landmark_onesided_step``) as the planner does.
+
+    A vertex-sharded index (``core.sharded.ShardedIndex``,
+    ``QbSIndex.build(..., sharded=...)``) satisfies the same contract:
+    its step runs the general lane over the mesh-resident label/CSR
+    blocks and returns the same replicated, already-symmetrized arrays —
+    callers cannot tell the layouts apart (DESIGN.md §11).
     """
     return index.serve_step
 

@@ -250,6 +250,15 @@ class ServingService:
             self._seen_cap = max(64, 4 * min(self.cache.capacity, 1 << 16))
         self.lane_served = [0] * N_LANES   # unique pairs answered per lane
 
+        if (mesh is not None or devices is not None) and getattr(
+                index, "is_sharded", False):
+            # a ShardedIndex is already mesh-resident: its lane steps run
+            # vertex-sharded over their own mesh (core.sharded), so batch-
+            # sharding the general lane on top would need the replicated
+            # ctx/scheme tables the sharded index exists to not hold
+            raise ValueError(
+                "mesh=/devices= batch sharding cannot wrap a sharded index; "
+                "ShardedIndex serves from its own mesh already")
         if mesh is None and devices is not None:
             from jax.sharding import Mesh
             if isinstance(devices, int):

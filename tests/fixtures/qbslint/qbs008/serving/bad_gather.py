@@ -1,0 +1,25 @@
+"""Seeded QBS008 violations: sharded tables gathered whole to host."""
+import jax
+import numpy as np
+
+
+def debug_dump(idx):
+    a = jax.device_get(idx.labels.labels_sh)   # line 7: fires
+    b = np.asarray(idx._src_sh)                # line 8: fires
+    c = np.array(idx.lm_sh[0])                 # line 9: fires
+    return a, b, c
+
+
+def checkpoint_sharded(labels_sh):  # qbslint: host-boundary
+    # a declared boundary: persisting the shards to disk is its job
+    return np.asarray(labels_sh)
+
+
+def audited_peek(vstart_sh):
+    # justified one-off; suppression keeps the gather auditable
+    return np.asarray(vstart_sh)  # qbslint: disable=QBS008
+
+
+def replicated_ok(out, mask):
+    # replicated outputs gather freely — no sharded receiver
+    return jax.device_get(out), np.asarray(mask)

@@ -1,0 +1,6 @@
+"""Basename scoping: a file named sharded.py is in QBS008 scope anywhere."""
+import numpy as np
+
+
+def snapshot(eid_sh):
+    return np.asarray(eid_sh)                  # line 6: fires

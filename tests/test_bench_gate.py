@@ -181,6 +181,37 @@ def test_roofline_rows_never_hit_tracked_metric_rule(tmp_path):
     assert regs == []
 
 
+def _shard_rec(frac: float, *, ts=1.0) -> dict:
+    return {"bench": "sharded_memory", "ts": ts, "scale": 0.25, "rows": [
+        {"graph": "ba-hub", "n_shards": 8, "per_device_frac": frac,
+         "per_device_bytes": 1.0e6, "replicated_bytes": 5.0e6},
+    ]}
+
+
+def test_sharded_rows_gate_on_absolute_ceiling(tmp_path):
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_shard_rec(0.19)]))
+    # growing within the ceiling passes (the rule is absolute, not
+    # relative to the baseline value)
+    ok = bench_gate.load_latest(
+        _write(tmp_path / "ok.json", [_shard_rec(0.24)]))
+    regs, _ = bench_gate.compare(base, ok, 0.25, shard_frac_ceiling=0.25)
+    assert regs == []
+    # climbing above the ceiling fails: sharding stopped scaling linearly
+    bad = bench_gate.load_latest(
+        _write(tmp_path / "bad.json", [_shard_rec(0.31)]))
+    regs, _ = bench_gate.compare(base, bad, 0.25, shard_frac_ceiling=0.25)
+    assert [r["metric"] for r in regs] == ["per_device_frac"]
+    assert regs[0]["current"] == pytest.approx(0.31)
+    # byte columns are floats (out of the key) and untracked: the ceiling
+    # rule is the only one that can fire on a sharded-memory row
+    cur_rec = _shard_rec(0.19)
+    cur_rec["rows"][0]["per_device_bytes"] = 9.9e9
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, _ = bench_gate.compare(base, cur, 0.25, shard_frac_ceiling=0.25)
+    assert regs == []
+
+
 def test_prune_bench_keeps_last_n_per_key(tmp_path):
     path = _write(tmp_path / "b.json", [
         _rec(1.0, 1.0, ts=1.0), _rec(2.0, 2.0, ts=2.0),

@@ -91,6 +91,29 @@ def test_qbs007_serving_int64_scope_and_suppression():
     assert all(f.path.endswith("bad_int64.py") for f in findings)
 
 
+def test_qbs008_host_gather_of_sharded_tables():
+    findings = _lint(FIXTURES / "qbs008")
+    assert _rules(findings) == ["QBS008"]
+    by_file = sorted((f.path.rsplit("/", 1)[-1], f.line) for f in findings)
+    assert by_file == [("bad_gather.py", 7), ("bad_gather.py", 8),
+                       ("bad_gather.py", 9), ("sharded.py", 6)]
+
+
+def test_qbs008_host_boundary_marker_exempts_def():
+    src = (
+        "import numpy as np\n"
+        "\n"
+        "\n"
+        "def save_shards(labels_sh):  # qbslint: host-boundary\n"
+        "    return np.asarray(labels_sh)\n"
+    )
+    assert lint_source("serving/ckpt.py", src) == []
+    # the same def without the marker fires
+    assert _rules(lint_source("serving/ckpt.py",
+                              src.replace("  # qbslint: host-boundary",
+                                          ""))) == ["QBS008"]
+
+
 def test_qbs007_jit_bodies_are_exempt():
     src = (
         "import jax\n"
@@ -146,6 +169,7 @@ def test_repo_src_tree_is_clean():
         "qbs006_bad.py",
         "qbs007_bad.py",
         "qbs007",
+        "qbs008",
     ],
 )
 def test_cli_nonzero_on_each_seeded_violation(fixture):
@@ -171,9 +195,9 @@ def test_cli_rule_filter_and_json_output():
     assert {f["rule"] for f in payload["findings"]} == {"QBS005"}
 
 
-def test_cli_list_rules_names_all_seven():
+def test_cli_list_rules_names_all_eight():
     proc = _cli("--list-rules")
     assert proc.returncode == 0
     for rule in ALL_RULES:
         assert rule.id in proc.stdout
-    assert len(ALL_RULES) == 7
+    assert len(ALL_RULES) == 8

@@ -11,6 +11,9 @@ rule never re-tokenizes.  Suppressions:
   the whole file.
 * ``# qbslint: locked`` on a ``def`` line declares the method's
   contract is "caller holds the lock" (consumed by QBS005).
+* ``# qbslint: host-boundary`` on a ``def`` line declares the function
+  an explicit host boundary for sharded tables — full-table
+  materialization is its *job* (consumed by QBS008).
 """
 from __future__ import annotations
 
@@ -23,7 +26,7 @@ from pathlib import Path
 from typing import Iterable, Sequence
 
 _PRAGMA = re.compile(
-    r"#\s*qbslint:\s*(?P<kind>disable-file|disable|locked)"
+    r"#\s*qbslint:\s*(?P<kind>disable-file|host-boundary|disable|locked)"
     r"(?:\s*=\s*(?P<rules>[A-Z0-9, ]+))?")
 
 
@@ -50,6 +53,7 @@ class Suppressions:
     by_line: dict[int, set[str] | None] = field(default_factory=dict)
     file_wide: set[str] = field(default_factory=set)
     locked_lines: set[int] = field(default_factory=set)
+    host_boundary_lines: set[int] = field(default_factory=set)
 
     def allows(self, finding: Finding) -> bool:
         if finding.rule in self.file_wide:
@@ -73,6 +77,11 @@ class Module:
         """True when the ``def`` carries a ``# qbslint: locked`` marker."""
         return getattr(node, "lineno", -1) in self.suppressions.locked_lines
 
+    def is_host_boundary_def(self, node: ast.AST) -> bool:
+        """True when the ``def`` carries ``# qbslint: host-boundary``."""
+        return (getattr(node, "lineno", -1)
+                in self.suppressions.host_boundary_lines)
+
 
 def _parse_suppressions(source: str) -> Suppressions:
     sup = Suppressions()
@@ -93,6 +102,8 @@ def _parse_suppressions(source: str) -> Suppressions:
                if rules else None)
         if kind == "locked":
             sup.locked_lines.add(lineno)
+        elif kind == "host-boundary":
+            sup.host_boundary_lines.add(lineno)
         elif kind == "disable-file":
             sup.file_wide |= ids or set()
         else:  # disable

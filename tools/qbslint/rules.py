@@ -1,4 +1,4 @@
-"""The seven QbS repo-invariant rules (see DESIGN.md §9 for rationale).
+"""The eight QbS repo-invariant rules (see DESIGN.md §9 for rationale).
 
 Every rule is a pure function of one parsed module.  Shared machinery:
 ``_Aliases`` resolves local names through the file's imports (``import
@@ -602,7 +602,65 @@ class PackedWidenOnHost(Rule):
                     "'# qbslint: disable=QBS007'")
 
 
+# ---------------------------------------------------------------------------
+# QBS008 — sharded tables never gathered whole to host
+# ---------------------------------------------------------------------------
+
+
+class NoReplicatedGather(Rule):
+    id = "QBS008"
+    summary = ("host gather (jax.device_get / np.asarray) of a sharded "
+               "table in serving/ or the sharded core — full-table "
+               "materialization silently rebuilds the replicated copy the "
+               "vertex-sharded index exists to avoid (DESIGN.md §11); "
+               "declared host boundaries mark the def "
+               "'# qbslint: host-boundary'")
+    _GATHERS = {"jax.device_get", "numpy.asarray", "numpy.array",
+                "jax.numpy.asarray", "jax.numpy.array"}
+    _FILES = {"distributed.py", "sharded.py"}
+
+    def applies(self, path: str) -> bool:
+        return ("/serving/" in f"/{path}"
+                or path.rsplit("/", 1)[-1] in self._FILES)
+
+    @staticmethod
+    def _is_sharded_expr(node: ast.AST) -> bool:
+        """Does the (Subscript-stripped) receiver chain name a sharded
+        table?  Convention (core.distributed / core.sharded): mesh-resident
+        arrays carry an ``_sh`` suffix or a ``sharded`` segment."""
+        while isinstance(node, ast.Subscript):
+            node = node.value
+        d = _dotted(node)
+        if d is None:
+            return False
+        segs = d.split(".")
+        return segs[-1].endswith("_sh") or any("sharded" in s for s in segs)
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        aliases = _Aliases(mod.tree)
+        spans = [(n.lineno, getattr(n, "end_lineno", None) or n.lineno)
+                 for n in ast.walk(mod.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and mod.is_host_boundary_def(n)]
+
+        def in_boundary(node: ast.AST) -> bool:
+            line = getattr(node, "lineno", 0)
+            return any(lo <= line <= hi for lo, hi in spans)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and node.args \
+                    and aliases.resolve(node.func) in self._GATHERS \
+                    and self._is_sharded_expr(node.args[0]) \
+                    and not in_boundary(node):
+                yield self.finding(
+                    mod, node, "host gather of a sharded table ('*_sh' / "
+                    "'sharded' receiver) outside a declared host boundary; "
+                    "serve from the shards, or — if this def IS the "
+                    "checkpoint/debug boundary — mark it "
+                    "'# qbslint: host-boundary'")
+
+
 ALL_RULES = (ShardMapViaCompat(), WallClockInServing(), HostSyncInJit(),
              JitInHotPath(), LockDiscipline(), CacheInsertBypass(),
-             PackedWidenOnHost())
+             PackedWidenOnHost(), NoReplicatedGather())
 RULES_BY_ID = {r.id: r for r in ALL_RULES}
