@@ -73,6 +73,7 @@ def main() -> None:
         sharded_memory,
         sketch_kernel,
         streaming_admission,
+        trace_replay,
     )
     from .common import emit
 
@@ -89,6 +90,7 @@ def main() -> None:
         (serving_throughput, {}),
         (streaming_admission, {}),
         (qos_scheduler, {}),
+        (trace_replay, {}),
         (roofline, {}),
         (sharded_memory, {}),
     ):

@@ -37,6 +37,30 @@ REPO = Path(__file__).resolve().parent.parent
 # metric name -> +1 (higher is better) / -1 (lower is better)
 TRACKED = {"qps": +1, "us_per_call": -1, "us_per_query": -1}
 
+# default absolute ceiling for p99_us rows when no --p99-ceiling-us class
+# bound matches (benchmarks/trace_replay.py; generous — CI passes real
+# per-class bounds)
+P99_DEFAULT_CEILING_US = 200_000.0
+
+
+def parse_p99_spec(spec: str | None) -> dict[str, float]:
+    """``--p99-ceiling-us`` spec -> {qos class: ceiling}.  A bare number
+    applies to every class (the ``*`` key); ``cls=value`` entries bound
+    one class each: ``"interactive=2048,bulk=65536"``."""
+    out = {"*": P99_DEFAULT_CEILING_US}
+    if not spec:
+        return out
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            cls, val = part.split("=", 1)
+            out[cls.strip()] = float(val)
+        else:
+            out["*"] = float(part)
+    return out
+
 
 def load_latest(path: Path, scale: float | None = None) -> dict:
     """Latest record per (bench, scale) from a JSONL trajectory.
@@ -68,7 +92,8 @@ def _row_key(row: dict) -> tuple:
 
 def compare(baseline: dict, current: dict, threshold: float,
             min_us: float = 50.0, frac_floor: float = 0.01,
-            shard_frac_ceiling: float = 0.25) -> tuple[list, list]:
+            shard_frac_ceiling: float = 0.25,
+            p99_ceiling_us: dict[str, float] | None = None) -> tuple[list, list]:
     """Compare two ``load_latest`` maps.  Returns ``(regressions, notes)``
     where each regression is a dict with the offending row key, metric,
     baseline/current values and the ratio.
@@ -90,7 +115,15 @@ def compare(baseline: dict, current: dict, threshold: float,
     *ceiling*: the vertex-sharded index must keep per-device label+CSR
     bytes under ``shard_frac_ceiling`` of the replicated footprint
     (linear-scaling floor on an 8-way mesh — DESIGN.md §11); the gate
-    fails only when the fraction climbs above the ceiling."""
+    fails only when the fraction climbs above the ceiling.
+
+    Rows carrying ``p99_us`` (``benchmarks/trace_replay.py`` — simulated
+    deterministic tail latency per QoS class) are gated by an absolute
+    per-class ceiling from ``p99_ceiling_us`` (``parse_p99_spec``): the
+    row's ``qos`` field selects its bound, falling back to the ``*``
+    entry.  ``p50_us`` rides along untracked."""
+    p99_ceiling_us = (p99_ceiling_us if p99_ceiling_us is not None
+                      else parse_p99_spec(None))
     regressions, notes = [], []
     for rec_key, base_rec in sorted(baseline.items(), key=str):
         cur_rec = current.get(rec_key)
@@ -131,6 +164,18 @@ def compare(baseline: dict, current: dict, threshold: float,
                         "ratio": frac / max(shard_frac_ceiling, 1e-12),
                     })
                 continue   # absolute-ceiling rows likewise
+            if "p99_us" in cur_row:
+                ceiling = p99_ceiling_us.get(
+                    str(cur_row.get("qos")), p99_ceiling_us["*"])
+                p99 = float(cur_row["p99_us"])
+                if p99 > ceiling:
+                    regressions.append({
+                        "bench": rec_key[0], "scale": rec_key[1],
+                        "row": dict(key), "metric": "p99_us",
+                        "baseline": ceiling, "current": p99,
+                        "ratio": p99 / max(ceiling, 1e-12),
+                    })
+                continue   # absolute per-class ceiling rows likewise
             for metric, sense in TRACKED.items():
                 if metric not in base_row or metric not in cur_row:
                     continue
@@ -167,6 +212,19 @@ def main(argv=None) -> int:
                          "the vertex-sharded index (fail iff current > "
                          "ceiling; default 0.25 = linear scaling on >= 4 "
                          "effective shards)")
+    ap.add_argument("--p99-ceiling-us", default=None, metavar="SPEC",
+                    help="absolute ceiling(s) for p99_us rows from "
+                         "trace_replay: a bare number for every class or "
+                         "'cls=value,...' per class, e.g. "
+                         "'interactive=2048,bulk=65536' (default "
+                         f"{P99_DEFAULT_CEILING_US:.0f} for all)")
+    ap.add_argument("--only", default=None, metavar="BENCH1,BENCH2",
+                    help="restrict gating to these bench names — the CI "
+                         "retry re-measures only the failing set")
+    ap.add_argument("--emit-failures", type=Path, default=None,
+                    metavar="FILE",
+                    help="write the comma-joined failing bench names to "
+                         "FILE (empty on pass) for the CI retry's --only")
     ap.add_argument("--scale", type=float, default=None,
                     help="only gate/refresh records at this scale (CI "
                          "pins 0.25; default: all)")
@@ -184,15 +242,25 @@ def main(argv=None) -> int:
         return 0
 
     baseline = load_latest(args.baseline, scale=args.scale)
+    if args.only is not None:
+        only = {b.strip() for b in args.only.split(",") if b.strip()}
+        baseline = {k: v for k, v in baseline.items() if k[0] in only}
+        current = {k: v for k, v in current.items() if k[0] in only}
+        print(f"bench gate: restricted to {sorted(only)}")
     if not baseline:
         print(f"bench gate: no baseline at {args.baseline}; nothing to gate")
         return 0
     regressions, notes = compare(baseline, current, args.threshold,
                                  min_us=args.min_us,
                                  frac_floor=args.frac_floor,
-                                 shard_frac_ceiling=args.shard_frac_ceiling)
+                                 shard_frac_ceiling=args.shard_frac_ceiling,
+                                 p99_ceiling_us=parse_p99_spec(
+                                     args.p99_ceiling_us))
     for note in notes:
         print(f"bench gate: {note}")
+    failing = sorted({r["bench"] for r in regressions})
+    if args.emit_failures is not None:
+        args.emit_failures.write_text(",".join(failing))
     if regressions:
         print(f"bench gate: {len(regressions)} regression(s) beyond "
               f"{args.threshold:.0%}:")
@@ -200,6 +268,7 @@ def main(argv=None) -> int:
             print(f"  FAIL {r['bench']}@scale={r['scale']} {r['row']} "
                   f"{r['metric']}: {r['baseline']:.3f} -> {r['current']:.3f} "
                   f"({r['ratio']:.2f}x)")
+        print(f"bench gate: failing benches: {','.join(failing)}")
         return 1
     print(f"bench gate: OK ({len(baseline)} baseline records, "
           f"threshold {args.threshold:.0%})")

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# The one CI bench list — every benchmark that appends a BENCH.json
+# record.  All three CI legs (quick PR benches, gate noise-retry,
+# nightly full-scale) run through here so the list can never drift
+# between them; the gate retry passes --only with the failing set
+# (scripts/bench_gate.py --emit-failures) to re-measure just those.
+#
+#   scripts/bench_suite.sh <scale> [--only bench1,bench2]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+scale="${1:?usage: bench_suite.sh <scale> [--only bench1,bench2]}"
+shift
+only=""
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --only) only="${2:?--only needs a comma-separated bench list}"; shift 2 ;;
+    *) echo "bench_suite.sh: unknown argument $1" >&2; exit 2 ;;
+  esac
+done
+
+benches=(
+  frontier_relay
+  serving_throughput
+  streaming_admission
+  qos_scheduler
+  trace_replay
+  label_size
+  roofline
+  sharded_memory
+)
+if [ -n "$only" ]; then
+  IFS=',' read -r -a benches <<<"$only"
+fi
+
+for bench in "${benches[@]}"; do
+  echo "# bench_suite: $bench (scale=$scale)" >&2
+  PYTHONPATH=src python -c "from benchmarks.$bench import run; run(scale=$scale)"
+done

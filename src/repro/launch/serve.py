@@ -8,6 +8,12 @@ and answer batched shortest-path-graph queries.
 sharded over an N-device mesh, every lane served from the shards —
 DESIGN.md §11); emulate devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--replicas N`` serves through the consistent-hash replica tier
+(``serving.ReplicaRouter`` — DESIGN.md §12) instead of the bare index,
+and ``--metrics-port P`` (0 = ephemeral) exports every replica's
+counters and per-QoS latency histograms as a Prometheus-style text
+endpoint at ``http://127.0.0.1:P/metrics`` while queries run.
 """
 from __future__ import annotations
 
@@ -47,6 +53,14 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="build the vertex-sharded index over this many "
                          "devices (0 = replicated single-device index)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a consistent-hash ReplicaRouter "
+                         "over this many streaming replicas (0 = direct "
+                         "index serving)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="export the metrics scrape endpoint on this port "
+                         "(0 = pick an ephemeral port); implies at least "
+                         "one streaming replica")
     args = ap.parse_args()
 
     g = build_graph(args.graph, args.n, args.seed)
@@ -81,8 +95,27 @@ def main() -> None:
     us = rng.integers(0, g.n_vertices, size=args.queries)
     vs = rng.integers(0, g.n_vertices, size=args.queries)
 
+    n_replicas = args.replicas
+    if args.metrics_port is not None and n_replicas == 0:
+        n_replicas = 1
+    router = server = None
+    if n_replicas:
+        from ..serving import MetricsRegistry, ReplicaRouter, serve_metrics
+        router = ReplicaRouter(idx, n_replicas=n_replicas, cache_size=4096,
+                               cache_policy="hub")
+        print(f"[serve] replica tier: {n_replicas} replicas behind "
+              f"consistent hashing")
+        if args.metrics_port is not None:
+            registry = MetricsRegistry()
+            for i, rep in enumerate(router.replicas):
+                registry.register(f"replica{i}", rep)
+            server = serve_metrics(registry, port=args.metrics_port)
+            print(f"[serve] metrics: http://127.0.0.1:"
+                  f"{server.server_address[1]}/metrics")
+
     t2 = time.perf_counter()
-    results = idx.query_batch(us, vs)
+    results = (router.query_batch(us, vs) if router is not None
+               else idx.query_batch(us, vs))
     t3 = time.perf_counter()
     dists = np.array([r.dist for r in results], dtype=np.int64)
     sizes = np.array([r.edge_ids.size for r in results])
@@ -93,6 +126,15 @@ def main() -> None:
         print(f"[serve] dist: mean={dists[finite].mean():.2f} "
               f"max={dists[finite].max()}; SPG edges: mean={sizes.mean():.1f} "
               f"max={sizes.max()}")
+
+    if router is not None:
+        routed = router.stats["routed"]
+        per_rep = {i: rep.stats["submitted"]
+                   for i, rep in enumerate(router.replicas)}
+        print(f"[serve] router: {routed} routed, per-replica {per_rep}")
+        if server is not None:
+            server.shutdown()
+        router.close()
 
 
 if __name__ == "__main__":

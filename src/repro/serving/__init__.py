@@ -17,13 +17,23 @@ from .serve_step import (
     serve_spg_batch,
 )
 from .clock import ManualClock, SystemClock
+from .metrics import (
+    LatencyHistogram,
+    MetricsRegistry,
+    merged_latency,
+    serve_metrics,
+)
+from .replicas import ReplicaRouter
 from .service import ResultCache, ServingService, round_chunk_to_shards
 from .stream import AdmissionPolicy, QoSClass, QueryFuture, StreamingService
 
 __all__ = [
     "AdmissionPolicy",
+    "LatencyHistogram",
     "ManualClock",
+    "MetricsRegistry",
     "QoSClass",
+    "ReplicaRouter",
     "SystemClock",
     "LANE_GENERAL",
     "LANE_LANDMARK_PAIR",
@@ -40,8 +50,10 @@ __all__ = [
     "make_prefill_step",
     "make_spg_serve_step",
     "merge_plans",
+    "merged_latency",
     "plan_from_pairs",
     "plan_queries",
     "round_chunk_to_shards",
+    "serve_metrics",
     "serve_spg_batch",
 ]

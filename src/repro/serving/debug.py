@@ -137,6 +137,12 @@ class Sanitizer:
             self.assert_owned(what)
         return check
 
+    def check(self, what: str):
+        """Public zero-arg ownership probe for guarded state that is not
+        a container subclass (e.g. ``metrics.LatencyHistogram`` counts):
+        the owner passes it as the object's ``check=`` hook."""
+        return self._check_for(what)
+
     def dict(self, *args, what: str = "a guarded dict", **kwargs):
         return GuardedDict(self._check_for(what), *args, **kwargs)
 

@@ -145,6 +145,7 @@ class ResultCache:
         self._protected: OrderedDict[tuple[int, int], tuple] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0   # entries dropped by capacity pressure
         self.bytes = 0       # packed payload bytes currently resident
 
     def __len__(self) -> int:
@@ -166,6 +167,20 @@ class ResultCache:
     def _evict_one(self) -> None:
         _, entry = (self._store or self._protected).popitem(last=False)
         self.bytes -= entry[0]
+        self.evictions += 1
+
+    def bytes_for(self, keys) -> int:
+        """Packed resident bytes attributable to ``keys`` (canonical
+        pairs; absent keys contribute 0) — the per-replica memory
+        attribution the partitioned-cache acceptance checks read."""
+        total = 0
+        for key in keys:
+            entry = self._store.get(key)
+            if entry is None:
+                entry = self._protected.get(key)
+            if entry is not None:
+                total += entry[0]
+        return total
 
     def put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
         if self.capacity == 0:

@@ -63,6 +63,7 @@ import numpy as np
 from ..core.graph import INF
 from . import debug
 from .clock import ManualClock, SystemClock  # noqa: F401  (re-export)
+from .metrics import LatencyHistogram
 from .planner import (
     LANE_GENERAL,
     LANE_LANDMARK_PAIR,
@@ -136,15 +137,18 @@ class AdmissionPolicy:
 class QueryFuture:
     """Handle for one submitted query; resolves when its canonical pair
     is answered (shared by every duplicate submission of that pair).
-    ``qos`` records the class this submission rode in under."""
+    ``qos`` records the class this submission rode in under and
+    ``t_submit`` its submit instant on the injected clock — the anchor
+    the per-class latency histogram measures resolution against."""
 
-    __slots__ = ("u", "v", "qos", "_stream", "_result")
+    __slots__ = ("u", "v", "qos", "t_submit", "_stream", "_result")
 
     def __init__(self, u: int, v: int, stream: "StreamingService",
-                 qos: str = "default"):
+                 qos: str = "default", t_submit: float = 0.0):
         self.u = int(u)
         self.v = int(v)
         self.qos = qos
+        self.t_submit = float(t_submit)
         self._stream = stream
         self._result = None
 
@@ -189,7 +193,7 @@ class StreamingService:
         "_queues", "_cls_backlog", "_deficit", "_pending", "_n_pending",
         "_deadline", "_heap", "_waiting", "_inflight", "_timer",
         "_timer_token", "_armed_for", "_chunk", "stats", "qos_stats",
-        "admission_log",
+        "admission_log", "lat_hist",
     )
 
     def __init__(self, index, *, policy: AdmissionPolicy | None = None,
@@ -256,6 +260,8 @@ class StreamingService:
             "chunks": 0,           # device chunks dispatched
             "padded_rows": 0,      # dead rows padded into those chunks
             "deadline_flushes": 0,  # flushes containing an expired pair
+            "handed_off": 0,       # pending pairs exported to a peer
+                                   # replica (handoff_pending)
         }, what="StreamingService.stats")
         # waits are wall-clock (injected-clock) seconds from submit to
         # admission — the queueing latency the deadline bounds; bounded
@@ -273,6 +279,15 @@ class StreamingService:
         # (the observability the fairness tests and benchmarks read)
         self.admission_log: deque = box.deque(
             maxlen=4096, what="StreamingService.admission_log")
+        # per-class submit->resolution latency histograms, recorded at
+        # future-resolution time on the injected clock (metrics layer,
+        # DESIGN.md §12); the sanitizer probe guards their counts like
+        # every other field in _QBS_GUARDED_FIELDS
+        self.lat_hist = box.dict({
+            c.name: LatencyHistogram(
+                check=(san.check(f"StreamingService.lat_hist[{c.name}]")
+                       if san is not None else None))
+            for c in self._classes}, what="StreamingService.lat_hist")
         # arm the runtime sanitizer's attribute guard (None when off)
         self._qbs = san
 
@@ -336,12 +351,13 @@ class StreamingService:
             cache = self.service.cache
             futs = []
             for u, v in zip(us.tolist(), vs.tolist()):
-                fut = QueryFuture(u, v, self, qos=cls.name)
+                fut = QueryFuture(u, v, self, qos=cls.name, t_submit=now)
                 futs.append(fut)
                 self.stats["submitted"] += 1
                 cstat["submitted"] += 1
                 if u == v:
                     fut._resolve(0, _NO_EDGES, INF)
+                    self.lat_hist[cls.name].observe(0.0)
                     self.stats["trivial"] += 1
                     cstat["trivial"] += 1
                     # lane_served semantics match the one-shot service:
@@ -370,6 +386,7 @@ class StreamingService:
                         lane = self._lane_of(key)
                         fut._resolve(got[0], got[1],
                                      d_top_of(lane, got[0], INF))
+                        self.lat_hist[cls.name].observe(0.0)
                         self.stats["cache_hits"] += 1
                         cstat["cache_hits"] += 1
                         self.service.lane_served[lane] += 1
@@ -420,6 +437,94 @@ class StreamingService:
         the current (injected) clock without submitting new traffic.  A
         no-op on an empty backlog — stale timer wakeups are safe."""
         with self._lock:
+            self._pump()
+            self._arm_timer()
+
+    # -- replica handoff (ReplicaRouter rolling restarts) --------------------
+
+    def handoff_pending(self) -> list:
+        """Atomically export every *pending* (not yet admitted) pair for
+        adoption by a peer replica: ``[(key, futures, qos name, t_enq,
+        deadline | None), ...]``.  In-flight pairs stay — they resolve
+        here on the caller's ``drain()`` — so no future is ever dropped
+        or double-resolved across a handoff.  Backlog queue entries are
+        left to lazy invalidation (their ``_pending`` seq is gone), the
+        deadline heap likewise; ``stats['handed_off']`` counts exported
+        pairs so the accounting identity stays exact:
+        ``admitted_pairs == submitted - trivial - cache_hits - joined -
+        handed_off``."""
+        with self._lock:
+            out = []
+            while self._pending:
+                key, (ci, t_enq, _seq) = self._pending.popitem()
+                futs = self._waiting.pop(key)
+                self._n_pending -= 1
+                self._cls_backlog[ci] -= 1
+                deadline = self._deadline.pop(key, None)
+                out.append((key, futs, self._classes[ci].name, t_enq,
+                            deadline))
+            self.stats["handed_off"] += len(out)
+            self._arm_timer()
+            return out
+
+    def adopt(self, key: tuple[int, int], futures: list, *, qos: str,
+              t_enq: float, deadline: float | None = None) -> None:
+        """Absorb one handed-off pair from a draining peer.  The futures
+        re-target this stream (their ``result()`` drains here), keep
+        their original submit times (latency spans the handoff), and the
+        pair re-enters this scheduler through the same resolution paths
+        a fresh submission would take: join an existing waiter list,
+        resolve from this replica's cache, or go pending with the
+        original deadline re-armed."""
+        if qos not in self._cls_index:
+            raise ValueError(
+                f"cannot adopt under unknown qos class {qos!r}; replicas "
+                f"must share one QoS config")
+        with self._lock:
+            ci = self._cls_index[qos]
+            cstat = self.qos_stats[qos]
+            now = self.clock.now()
+            for fut in futures:
+                fut._stream = self
+            self.stats["submitted"] += len(futures)
+            cstat["submitted"] += len(futures)
+            waiters = self._waiting.get(key)
+            if waiters is not None:            # pending/in flight here: join
+                waiters.extend(futures)
+                self.stats["joined"] += len(futures)
+                cstat["joined"] += len(futures)
+                if deadline is not None and \
+                        deadline < self._deadline.get(key, math.inf):
+                    self._deadline[key] = deadline
+                    heapq.heappush(self._heap,
+                                   (deadline, next(self._seq), key))
+            else:
+                cache = self.service.cache
+                got = cache.get(key) if cache is not None else None
+                if got is not None:
+                    lane = self._lane_of(key)
+                    d_top = d_top_of(lane, got[0], INF)
+                    for fut in futures:
+                        fut._resolve(got[0], got[1], d_top)
+                        self.lat_hist[fut.qos].observe(
+                            (now - fut.t_submit) * 1e6)
+                    self.stats["cache_hits"] += len(futures)
+                    cstat["cache_hits"] += len(futures)
+                    self.service.lane_served[lane] += len(futures)
+                    self._arm_timer()
+                    return
+                self._waiting[key] = list(futures)
+                seq = next(self._seq)
+                self._pending[key] = (ci, t_enq, seq)
+                self._queues[ci].append((key, seq))
+                self._cls_backlog[ci] += 1
+                self._n_pending += 1
+                # one creator per fresh pair, like submit_batch duplicates
+                self.stats["joined"] += len(futures) - 1
+                cstat["joined"] += len(futures) - 1
+                if deadline is not None:
+                    self._deadline[key] = deadline
+                    heapq.heappush(self._heap, (deadline, seq, key))
             self._pump()
             self._arm_timer()
 
@@ -679,6 +784,7 @@ class StreamingService:
     # -- resolution ----------------------------------------------------------
 
     def _sync_until(self, limit: int) -> None:  # qbslint: locked
+        now = self.clock.now()
         while len(self._inflight) > limit:
             plan, sel, live, out = self._inflight.popleft()
             d, m = jax.device_get(out)
@@ -691,6 +797,10 @@ class StreamingService:
                 d_top = d_top_of(int(plan.lane[row]), dist, INF)
                 for fut in self._waiting.pop(key):
                     fut._resolve(dist, eids, d_top)
+                    # resolution-time latency on the injected clock: under
+                    # ManualClock this is a pure function of the trace
+                    self.lat_hist[fut.qos].observe(
+                        (now - fut.t_submit) * 1e6)
                 self._deadline.pop(key, None)
                 self.service.cache_put(key, (dist, eids))
 

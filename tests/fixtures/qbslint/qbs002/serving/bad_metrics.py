@@ -1,0 +1,12 @@
+"""Fixture: a metrics exporter stamping scrapes with wall time (QBS002).
+
+Latency histograms record at future-resolution time on the *injected*
+clock; reaching for ``time`` here would make the histogram counts depend
+on host speed instead of the trace."""
+import time
+
+
+def snapshot(histogram):
+    scraped_at = time.monotonic()           # QBS002
+    time.sleep(0.0)                         # QBS002
+    return {"scraped_at": scraped_at, "counts": list(histogram)}

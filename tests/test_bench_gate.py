@@ -226,6 +226,114 @@ def test_prune_bench_keeps_last_n_per_key(tmp_path):
     assert bench_run.prune_bench(path, 2) == 0   # idempotent
 
 
+def _p99_rec(p99_int: float, p99_bulk: float, *, ts=1.0) -> dict:
+    rows = []
+    for qos, p99 in (("interactive", p99_int), ("bulk", p99_bulk)):
+        rows.append({"trace": "hub-steady", "n_replicas": 4, "qos": qos,
+                     "p50_us": p99 / 2, "p99_us": p99, "n_obs": 100})
+    return {"bench": "trace_replay", "ts": ts, "scale": 0.25, "rows": rows}
+
+
+def test_p99_rows_gate_on_absolute_per_class_ceiling(tmp_path):
+    ceilings = {"*": 200_000.0, "interactive": 2048.0, "bulk": 65536.0}
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_p99_rec(1024.0, 32768.0)]))
+    # a 2x relative climb that stays at the ceiling passes — the rule is
+    # absolute (deterministic simulated time has no noise to tolerate)
+    ok = bench_gate.load_latest(
+        _write(tmp_path / "ok.json", [_p99_rec(2048.0, 65536.0)]))
+    regs, _ = bench_gate.compare(base, ok, 0.25, p99_ceiling_us=ceilings)
+    assert regs == []
+    # one bucket above its class ceiling fails, naming the class's row
+    bad = bench_gate.load_latest(
+        _write(tmp_path / "bad.json", [_p99_rec(4096.0, 65536.0)]))
+    regs, _ = bench_gate.compare(base, bad, 0.25, p99_ceiling_us=ceilings)
+    assert [r["metric"] for r in regs] == ["p99_us"]
+    assert regs[0]["row"]["qos"] == "interactive"
+    assert regs[0]["baseline"] == pytest.approx(2048.0)
+    assert regs[0]["current"] == pytest.approx(4096.0)
+    # an unknown class falls back to the generous * ceiling
+    odd = _p99_rec(1024.0, 32768.0)
+    odd["rows"][0]["qos"] = "background"
+    odd["rows"][0]["p99_us"] = 150_000.0
+    base2 = bench_gate.load_latest(_write(tmp_path / "b2.json", [odd]))
+    regs, _ = bench_gate.compare(base2, base2, 0.25, p99_ceiling_us=ceilings)
+    assert regs == []
+
+
+def test_p50_rides_along_untracked(tmp_path):
+    # p50_us is a float (out of the row key) and carries no rule: only
+    # the p99 ceiling can fire on a trace-replay row
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_p99_rec(1024.0, 32768.0)]))
+    cur_rec = _p99_rec(1024.0, 32768.0)
+    cur_rec["rows"][0]["p50_us"] = 1e9           # absurd, but untracked
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, _ = bench_gate.compare(
+        base, cur, 0.25,
+        p99_ceiling_us={"*": 200_000.0, "interactive": 2048.0})
+    assert regs == []
+
+
+def test_parse_p99_spec():
+    d = bench_gate.parse_p99_spec(None)
+    assert d == {"*": bench_gate.P99_DEFAULT_CEILING_US}
+    assert bench_gate.parse_p99_spec("5000") == {"*": 5000.0}
+    assert bench_gate.parse_p99_spec("interactive=2048,bulk=65536") == {
+        "*": bench_gate.P99_DEFAULT_CEILING_US,
+        "interactive": 2048.0, "bulk": 65536.0}
+    assert bench_gate.parse_p99_spec("1000, interactive=2048") == {
+        "*": 1000.0, "interactive": 2048.0}
+
+
+def test_synthetic_p99_regression_fails_main(tmp_path):
+    """End-to-end: a synthetic p99 regression trips the CLI gate with the
+    CI ceilings, and the emitted failure set names trace_replay."""
+    base = _write(tmp_path / "base.json", [_p99_rec(2048.0, 65536.0)])
+    bad = _write(tmp_path / "bad.json", [_p99_rec(8192.0, 65536.0)])
+    out = tmp_path / "failing.txt"
+    rc = bench_gate.main([
+        "--baseline", str(base), "--current", str(bad),
+        "--p99-ceiling-us", "interactive=2048,bulk=65536",
+        "--emit-failures", str(out)])
+    assert rc == 1
+    assert out.read_text() == "trace_replay"
+    rc = bench_gate.main([
+        "--baseline", str(base), "--current", str(base),
+        "--p99-ceiling-us", "interactive=2048,bulk=65536",
+        "--emit-failures", str(out)])
+    assert rc == 0
+    assert out.read_text() == ""                 # pass empties the set
+
+
+def test_only_restricts_gating_to_named_benches(tmp_path):
+    recs = [_rec(100.0, 50.0, bench="a"), _rec(100.0, 50.0, bench="c")]
+    base = _write(tmp_path / "base.json", recs)
+    cur = _write(tmp_path / "cur.json", [
+        _rec(10.0, 50.0, bench="a"),             # regressed
+        _rec(100.0, 50.0, bench="c"),
+    ])
+    argv = ["--baseline", str(base), "--current", str(cur)]
+    assert bench_gate.main(argv) == 1
+    # the retry path: --only on the healthy bench ignores the failing one
+    assert bench_gate.main(argv + ["--only", "c"]) == 0
+    assert bench_gate.main(argv + ["--only", "a,c"]) == 1
+
+
+def test_emit_failures_joins_failing_bench_set(tmp_path):
+    base = _write(tmp_path / "base.json", [
+        _rec(100.0, 50.0, bench="a"), _rec(100.0, 50.0, bench="b"),
+        _rec(100.0, 50.0, bench="c")])
+    cur = _write(tmp_path / "cur.json", [
+        _rec(10.0, 50.0, bench="a"), _rec(100.0, 50.0, bench="b"),
+        _rec(10.0, 50.0, bench="c")])
+    out = tmp_path / "failing.txt"
+    rc = bench_gate.main(["--baseline", str(base), "--current", str(cur),
+                          "--emit-failures", str(out)])
+    assert rc == 1
+    assert out.read_text() == "a,c"              # sorted, deduped, joined
+
+
 def test_main_exit_codes_and_refresh(tmp_path):
     base = _write(tmp_path / "base.json", [_rec(100.0, 50.0)])
     good = _write(tmp_path / "good.json", [_rec(100.0, 50.0)])

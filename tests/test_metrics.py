@@ -1,0 +1,250 @@
+"""Observability layer (DESIGN.md §12): log2-bucket latency histograms
+recorded at future-resolution time on the injectable clock, the
+``MetricsRegistry`` snapshot/text exposition, the stdlib scrape endpoint,
+and the ``ResultCache`` eviction/byte attribution counters the replica
+acceptance checks read."""
+import math
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import (
+    LatencyHistogram,
+    ManualClock,
+    MetricsRegistry,
+    QoSClass,
+    StreamingService,
+    merged_latency,
+    serve_metrics,
+)
+from repro.serving.metrics import N_BUCKETS, bucket_of, bucket_upper_us
+from repro.serving.service import ResultCache
+
+
+@pytest.fixture(scope="module")
+def index():
+    return QbSIndex.build(gnp_random_graph(40, 3.0, seed=23),
+                          n_landmarks=4, chunk=8)
+
+
+def _non(index, k):
+    return int(np.flatnonzero(~index._is_landmark_np)[k])
+
+
+# ---------------------------------------------------------------- histogram
+
+
+def test_bucket_edges_pin_the_issue_cases():
+    """The four edges the ISSUE names: zero, the 1us boundary, the last
+    finite bucket, and overflow."""
+    assert bucket_of(0.0) == 0
+    assert bucket_of(0.5) == 0              # sub-microsecond -> bucket 0
+    assert bucket_of(1.0) == 1              # first finite log2 bucket
+    assert bucket_of(2.0**31 - 1) == 31     # top finite bucket
+    assert bucket_of(2.0**31) == N_BUCKETS - 1        # overflow
+    assert bucket_of(1e300) == N_BUCKETS - 1
+    assert bucket_upper_us(0) == 1.0
+    assert bucket_upper_us(31) == float(2**31)
+    assert math.isinf(bucket_upper_us(N_BUCKETS - 1))
+
+
+def test_every_finite_bucket_brackets_its_values():
+    """bucket b in [1,31] holds exactly [2^(b-1), 2^b)."""
+    for b in range(1, N_BUCKETS - 1):
+        lo, hi = 2 ** (b - 1), 2**b
+        assert bucket_of(float(lo)) == b
+        assert bucket_of(float(hi - 1)) == b
+        assert bucket_of(float(hi)) == (b + 1 if b < 31 else N_BUCKETS - 1)
+        assert bucket_upper_us(b) == float(hi)
+
+
+def test_observe_counts_stay_python_ints():
+    """Counts must be host-side Python ints even when fed numpy scalars
+    (QBS007's spirit: no numpy scalars leak into the scrape path)."""
+    h = LatencyHistogram()
+    h.observe(np.float64(5.0))
+    h.observe(np.int64(3))
+    assert all(type(c) is int for c in h.counts)
+    assert type(h.total) is int and h.total == 2
+    assert isinstance(h.sum_us, float) and h.sum_us == 8.0
+
+
+def test_quantile_is_conservative_bucket_upper_edge():
+    h = LatencyHistogram()
+    assert h.quantile(0.5) == 0.0           # empty histogram
+    h.observe(3.0)                          # bucket 2: [2, 4)
+    assert h.quantile(0.5) == 4.0
+    assert h.quantile(0.99) == 4.0
+    for _ in range(99):
+        h.observe(0.0)
+    # 100 observations, 99 in bucket 0: p50 rounds to bucket 0's edge,
+    # p99 lands on the rank-99 observation (still bucket 0)
+    assert h.quantile(0.50) == 1.0
+    assert h.quantile(0.99) == 1.0
+    assert h.quantile(1.00) == 4.0          # the single slow observation
+
+
+def test_overflow_quantile_reports_inf_not_a_finite_lie():
+    h = LatencyHistogram()
+    h.observe(2.0**40)
+    assert h.counts[N_BUCKETS - 1] == 1
+    assert math.isinf(h.quantile(0.5))
+    snap = h.snapshot()
+    assert math.isinf(snap["p99_us"]) and snap["total"] == 1
+
+
+def test_check_hook_fires_before_every_mutation():
+    calls = []
+
+    def probe():
+        calls.append(1)
+        raise AssertionError("off-lock observe")
+
+    h = LatencyHistogram(check=probe)
+    with pytest.raises(AssertionError, match="off-lock"):
+        h.observe(1.0)
+    assert calls == [1]
+    assert h.total == 0 and sum(h.counts) == 0   # rejected before mutating
+
+
+def test_merged_latency_is_exact_bucket_sum():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    for us in (0.0, 3.0, 100.0):
+        a.observe(us)
+    for us in (3.0, 2.0**35):
+        b.observe(us)
+    m = merged_latency([a, b])
+    assert m.total == 5 and m.sum_us == a.sum_us + b.sum_us
+    assert m.counts == [x + y for x, y in zip(a.counts, b.counts)]
+    assert math.isinf(m.quantile(0.99))
+
+
+# ---------------------------------------------------------------- registry
+
+
+def _traced_service(index):
+    clk = ManualClock()
+    st = StreamingService(
+        index, clock=clk, cache_size=32, cache_policy="hub",
+        qos=(QoSClass("interactive", max_wait=0.002, weight=4.0),
+             QoSClass("bulk", max_wait=0.05, weight=1.0)))
+    non = np.flatnonzero(~index._is_landmark_np)
+    st.submit_batch(non[:4], non[4:8], qos="interactive")
+    clk.advance(0.001)
+    st.submit_batch(non[2:6], non[6:10], qos="bulk")   # repeats -> cache/join
+    clk.advance(0.1)                                   # both deadlines fire
+    st.submit_batch(non[:4], non[4:8], qos="interactive")   # cache hits
+    st.drain()
+    return st
+
+
+def test_registry_snapshot_equals_service_counters(index):
+    st = _traced_service(index)
+    reg = MetricsRegistry()
+    reg.register("svc", st)
+    snap = reg.snapshot()
+    assert set(snap) == {"svc"}
+    s = snap["svc"]
+    assert s["stats"] == dict(st.stats)
+    for name, cs in st.qos_stats.items():
+        want = {k: v for k, v in cs.items() if k != "waits"}
+        want["n_waits"] = len(cs["waits"])
+        assert s["qos"][name] == want
+        assert s["latency_us"][name] == st.lat_hist[name].snapshot()
+        # resolution accounting: one observation per resolved future
+        assert st.lat_hist[name].total == cs["submitted"]
+    assert sum(h["total"] for h in s["latency_us"].values()) \
+        == st.stats["submitted"]
+    assert s["admission"]["rounds"] == len(st.admission_log)
+    assert s["cache"]["hits"] == st.service.cache.hits
+    assert s["cache"]["evictions"] == st.service.cache.evictions
+    assert s["cache"]["bytes"] == st.service.cache.bytes
+    assert s["n_pending"] == 0 and s["n_inflight"] == 0
+    st.close()
+
+
+def test_registry_rejects_duplicate_names(index):
+    st = StreamingService(index, clock=ManualClock())
+    reg = MetricsRegistry()
+    reg.register("svc", st)
+    with pytest.raises(ValueError, match="duplicate"):
+        reg.register("svc", st)
+    st.close()
+
+
+def test_render_text_cumulative_le_series(index):
+    st = _traced_service(index)
+    reg = MetricsRegistry()
+    reg.register("svc", st)
+    text = reg.render_text()
+    assert text.endswith("\n")
+    for cls in ("interactive", "bulk"):
+        pre = f'qbs_latency_us_bucket{{service="svc",qos="{cls}",le='
+        cums = [int(ln.rsplit(" ", 1)[1])
+                for ln in text.splitlines() if ln.startswith(pre)]
+        assert len(cums) == N_BUCKETS
+        assert cums == sorted(cums)                  # cumulative: monotone
+        assert cums[-1] == st.lat_hist[cls].total    # +Inf bucket == count
+        assert f'qbs_latency_us_count{{service="svc",qos="{cls}"}} ' \
+               f"{st.lat_hist[cls].total}" in text
+    assert f'qbs_submitted_total{{service="svc"}} ' \
+           f"{st.stats['submitted']}" in text
+    assert 'qbs_cache_hits{service="svc"}' in text
+    st.close()
+
+
+def test_scrape_endpoint_serves_and_404s(index):
+    st = _traced_service(index)
+    reg = MetricsRegistry()
+    reg.register("svc", st)
+    server = serve_metrics(reg, port=0)
+    port = server.server_address[1]
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=10) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            body = resp.read().decode()
+        assert body == reg.render_text()
+        assert "qbs_latency_us_bucket" in body
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/nope", timeout=10)
+        assert ei.value.code == 404
+    finally:
+        server.shutdown()
+        server.server_close()
+        st.close()
+
+
+# ---------------------------------------------------------------- cache
+
+
+def _entry(dist, n):
+    return (dist, np.arange(n, dtype=np.int32))
+
+
+def test_cache_eviction_counter_and_bytes_for():
+    cache = ResultCache(2)
+    cache.put((0, 1), _entry(1, 4))
+    cache.put((0, 2), _entry(2, 4))
+    assert cache.evictions == 0
+    cache.put((0, 3), _entry(3, 4))          # LRU (0,1) evicted
+    assert cache.evictions == 1
+    assert cache.get((0, 1)) is None
+    present = [(0, 2), (0, 3)]
+    assert cache.bytes_for(present) == cache.bytes > 0
+    assert cache.bytes_for([(0, 1), (9, 9)]) == 0    # absent keys -> 0
+    assert cache.bytes_for(present + [(9, 9)]) == cache.bytes
+
+
+def test_bytes_for_covers_the_protected_tier():
+    cache = ResultCache(4, protect=lambda k: k[0] == 0, protected_frac=0.5)
+    cache.put((0, 1), _entry(1, 8))          # protected tier
+    cache.put((5, 6), _entry(2, 8))          # unprotected tier
+    assert cache.bytes_for([(0, 1)]) > 0
+    assert cache.bytes_for([(5, 6)]) > 0
+    assert cache.bytes_for([(0, 1), (5, 6)]) == cache.bytes

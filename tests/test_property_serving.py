@@ -38,7 +38,14 @@ import pytest
 from helpers.serving_oracle import OracleCache
 
 from repro.core import QbSIndex, from_edges
-from repro.serving import AdmissionPolicy, ManualClock, QoSClass, StreamingService
+from repro.serving import (
+    AdmissionPolicy,
+    ManualClock,
+    MetricsRegistry,
+    QoSClass,
+    ReplicaRouter,
+    StreamingService,
+)
 
 V_BUCKET = 32
 E_BUCKET = 256          # directed slots
@@ -163,13 +170,27 @@ def _run_trace(seed: int, n_ops: int = 24) -> None:
             assert all(w <= mw + 1e-9 for w in waits), (name, mw, max(waits))
 
     # accounting: every submission resolved through exactly one path
+    # (handed_off is 0 on a lone service — the term keeps the identity
+    # shared with the per-replica checks below)
     s = st.stats
-    fresh = s["submitted"] - s["trivial"] - s["cache_hits"] - s["joined"]
+    fresh = (s["submitted"] - s["trivial"] - s["cache_hits"] - s["joined"]
+             - s["handed_off"])
     assert s["admitted_pairs"] == fresh
     assert sum(st.qos_stats[nm]["admitted"] for nm in names) == fresh
     assert sum(st.service.lane_served) == \
         s["trivial"] + s["cache_hits"] + s["admitted_pairs"]
     assert len(futs) == s["submitted"]
+
+    # observability: the registry snapshot is exactly the live counters,
+    # and every resolution recorded exactly one latency observation
+    reg = MetricsRegistry()
+    reg.register("svc", st)
+    snap = reg.snapshot()["svc"]
+    assert snap["stats"] == dict(s)
+    for name in names:
+        assert st.lat_hist[name].total == st.qos_stats[name]["submitted"]
+        assert snap["latency_us"][name] == st.lat_hist[name].snapshot()
+    assert sum(h.total for h in st.lat_hist.values()) == s["submitted"]
 
 
 # -- tier-1 driver: deterministic, >= 50 examples, no hypothesis needed ------
@@ -178,6 +199,113 @@ def _run_trace(seed: int, n_ops: int = 24) -> None:
 @pytest.mark.parametrize("seed", range(56 * _SCALE))
 def test_streaming_trace_properties(seed):
     _run_trace(seed)
+
+
+# -- replica-tier fuzz: the same invariants through a ReplicaRouter ----------
+
+
+def _run_router_trace(seed: int, n_ops: int = 24) -> None:
+    """One replica-tier fuzz example: the streaming trace space plus
+    random mid-trace ``drain_replica``/``restore_replica`` (rolling
+    restarts), on 3 replicas with lockstep ``ManualClock``s.  Checks
+    oracle bit-identity, duplicate consistency, per-replica accounting
+    (including ``handed_off``), and the per-class wait bounds — handed-off
+    pairs keep their deadlines on the adopter."""
+    rng = np.random.default_rng(10_000 + seed)
+    g, n, idx = _built(int(rng.integers(N_GRAPH_SEEDS)))
+    qos = QOS_CONFIGS[int(rng.integers(len(QOS_CONFIGS)))]
+    n_rep = 3
+    clks = [ManualClock() for _ in range(n_rep)]
+    router = ReplicaRouter(
+        idx, n_replicas=n_rep, clocks=clks,
+        policy=POLICIES[int(rng.integers(len(POLICIES)))],
+        qos=qos, async_depth=int(rng.integers(1, 3)),
+        **CACHES[int(rng.integers(len(CACHES)))])
+    names = [c.name for c in router.replicas[0].qos_classes]
+    max_wait = {c.name: c.max_wait for c in router.replicas[0].qos_classes}
+
+    futs: list = []
+    recent: list[tuple[int, int]] = []
+
+    def draw_pair():
+        if recent and rng.random() < 0.3:
+            u, v = recent[int(rng.integers(len(recent)))]
+            return (v, u) if rng.random() < 0.5 else (u, v)
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        recent.append((u, v))
+        return u, v
+
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.40:
+            u, v = draw_pair()
+            futs.append(router.submit(
+                u, v, qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.55:
+            pairs = [draw_pair() for _ in range(int(rng.integers(2, 7)))]
+            futs.extend(router.submit_batch(
+                [p[0] for p in pairs], [p[1] for p in pairs],
+                qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.72:
+            dt = DTS[int(rng.integers(len(DTS)))]
+            for c in clks:                          # lockstep time base
+                c.advance(dt)
+        elif r < 0.80:
+            router.drain()
+        elif r < 0.86:
+            router.poll()
+        elif r < 0.96:                              # rolling restart step
+            live = router.live_replicas()
+            down = [i for i in range(n_rep) if i not in live]
+            if down and rng.random() < 0.5:
+                router.restore_replica(down[int(rng.integers(len(down)))])
+            elif len(live) > 1:
+                router.drain_replica(live[int(rng.integers(len(live)))])
+        elif futs:
+            f = futs[int(rng.integers(len(futs)))]
+            f.result()
+            assert f.done()
+    router.drain()
+
+    for rep in router.replicas:
+        assert rep.n_pending == 0 and rep.n_inflight == 0
+        assert not rep._waiting and not rep._pending
+    assert all(f.done() for f in futs)
+
+    oracle = OracleCache(g)
+    by_key: dict[tuple[int, int], list] = {}
+    for f in futs:
+        res = f.result()
+        oracle.assert_result(res)
+        by_key.setdefault((min(f.u, f.v), max(f.u, f.v)), []).append(res)
+    for group in by_key.values():
+        for r in group[1:]:
+            assert r.dist == group[0].dist
+            assert np.array_equal(r.edge_ids, group[0].edge_ids)
+
+    for rep in router.replicas:
+        s = rep.stats
+        fresh = (s["submitted"] - s["trivial"] - s["cache_hits"]
+                 - s["joined"] - s["handed_off"])
+        assert s["admitted_pairs"] == fresh, dict(s)
+        for name in names:
+            mw = max_wait[name]
+            waits = rep.qos_stats[name]["waits"]
+            assert all(w >= 0 for w in waits)
+            if mw is not None:
+                assert all(w <= mw + 1e-9 for w in waits), \
+                    (name, mw, max(waits))
+    # every routed future resolved (and recorded its latency) exactly
+    # once tier-wide, wherever handoffs re-homed it
+    assert router.stats["routed"] == len(futs)
+    assert sum(h.total for rep in router.replicas
+               for h in rep.lat_hist.values()) == len(futs)
+    router.close()
+
+
+@pytest.mark.parametrize("seed", range(14 * _SCALE))
+def test_replica_router_trace_properties(seed):
+    _run_router_trace(seed)
 
 
 # -- hypothesis driver: explores/shrinks the same space ----------------------

@@ -50,8 +50,13 @@ def test_qbs001_catches_every_shard_map_route():
 def test_qbs002_serving_scope_and_clock_exemption():
     findings = _lint(FIXTURES / "qbs002")
     assert _rules(findings) == ["QBS002"]
-    assert len(findings) == 5
-    assert all(f.path.endswith("bad_wallclock.py") for f in findings)
+    assert len(findings) == 7
+    by_file: dict = {}
+    for f in findings:
+        by_file.setdefault(f.path.rsplit("/", 1)[-1], []).append(f)
+    assert set(by_file) == {"bad_wallclock.py", "bad_metrics.py"}
+    assert len(by_file["bad_wallclock.py"]) == 5
+    assert len(by_file["bad_metrics.py"]) == 2
 
 
 def test_qbs003_host_sync_in_jit_bodies():

@@ -1,0 +1,324 @@
+"""Replica serving tier (DESIGN.md §12): deterministic consistent-hash
+placement, bit-identity of N replicas vs one service vs the numpy oracle,
+cache partitioning (each hot key cached on exactly one replica), and the
+drain/handoff protocol for rolling restarts — no future dropped or
+double-resolved, per-replica accounting exact."""
+import numpy as np
+import pytest
+
+from helpers.serving_oracle import OracleCache
+
+from repro.core import QbSIndex, gnp_random_graph
+from repro.serving import (
+    AdmissionPolicy,
+    ManualClock,
+    QoSClass,
+    ReplicaRouter,
+    StreamingService,
+)
+from repro.serving.replicas import key_point, mix64
+from repro.serving.stream import QueryFuture
+
+WIDE = AdmissionPolicy(adaptive=False, chunk=64)   # never size-triggers
+QOS = (QoSClass("interactive", max_wait=0.002, weight=4.0),
+       QoSClass("bulk", max_wait=0.05, weight=1.0))
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gnp_random_graph(40, 3.0, seed=23)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return QbSIndex.build(graph, n_landmarks=4, chunk=8)
+
+
+def _clocks(n):
+    return [ManualClock() for _ in range(n)]
+
+
+def _advance(clocks, dt):
+    for c in clocks:
+        c.advance(dt)
+
+
+def _pairs(rng, n, k):
+    us = rng.integers(0, n, size=k)
+    vs = rng.integers(0, n, size=k)
+    return us, vs
+
+
+def _accounting(rep):
+    s = rep.stats
+    fresh = (s["submitted"] - s["trivial"] - s["cache_hits"] - s["joined"]
+             - s["handed_off"])
+    assert s["admitted_pairs"] == fresh, dict(s)
+
+
+# ---------------------------------------------------------------- placement
+
+
+def test_mix64_and_key_point_are_deterministic_and_orientation_free():
+    assert mix64(0) == mix64(0)
+    assert mix64(1) != mix64(2)
+    assert key_point((3, 7)) == key_point((3, 7))
+    # the router canonicalizes before hashing; key_point itself is raw
+    assert key_point((3, 7)) != key_point((7, 3))
+
+
+def test_owner_map_deterministic_across_instances(index):
+    a = ReplicaRouter(index, n_replicas=4, clocks=_clocks(4), policy=WIDE)
+    b = ReplicaRouter(index, n_replicas=4, clocks=_clocks(4), policy=WIDE)
+    rng = np.random.default_rng(7)
+    owners = set()
+    try:
+        for u, v in rng.integers(0, 40, size=(200, 2)):
+            u, v = int(u), int(v)
+            i = a.owner_of(u, v)
+            assert i == b.owner_of(u, v)            # same ring, same owner
+            assert i == a.owner_of(v, u)            # canonical (min, max)
+            owners.add(i)
+        assert owners == {0, 1, 2, 3}               # every replica owns keys
+    finally:
+        a.close()
+        b.close()
+
+
+def test_router_validates_construction(index):
+    with pytest.raises(ValueError, match="n_replicas"):
+        ReplicaRouter(index, n_replicas=0)
+    with pytest.raises(ValueError, match="clocks"):
+        ReplicaRouter(index, n_replicas=3, clocks=_clocks(2))
+
+
+# ---------------------------------------------------------------- identity
+
+
+def test_four_replicas_bit_identical_to_one_service(index):
+    """Hub-skewed repeat-heavy trace through n=4 vs a single service on
+    lockstep ManualClocks: identical (dist, edge_ids) per future, both
+    matching the numpy oracle."""
+    rng = np.random.default_rng(11)
+    hot = [tuple(int(x) for x in p) for p in rng.integers(0, 40, size=(6, 2))]
+
+    def trace(submit, advance):
+        futs = []
+        for step in range(8):
+            if step % 2 == 0:       # hot repeats (cache hits + joins)
+                pairs = [hot[int(rng_t.integers(len(hot)))]
+                         for _ in range(5)]
+            else:
+                pairs = [tuple(int(x) for x in p)
+                         for p in rng_t.integers(0, 40, size=(5, 2))]
+            qos = "interactive" if step % 3 else "bulk"
+            futs.extend(submit([p[0] for p in pairs],
+                               [p[1] for p in pairs], qos))
+            advance((0.0, 0.001, 0.003, 0.06)[step % 4])
+        return futs
+
+    rng_t = np.random.default_rng(13)
+    clk1 = ManualClock()
+    single = StreamingService(index, clock=clk1, policy=WIDE, qos=QOS,
+                              cache_size=256, cache_policy="hub")
+    futs1 = trace(lambda us, vs, q: single.submit_batch(us, vs, qos=q),
+                  clk1.advance)
+    single.drain()
+
+    rng_t = np.random.default_rng(13)               # identical trace
+    clks = _clocks(4)
+    router = ReplicaRouter(index, n_replicas=4, clocks=clks, policy=WIDE,
+                           qos=QOS, cache_size=256, cache_policy="hub")
+    futs4 = trace(lambda us, vs, q: router.submit_batch(us, vs, qos=q),
+                  lambda dt: _advance(clks, dt))
+    router.drain()
+
+    assert len(futs1) == len(futs4)
+    oracle = OracleCache(index.graph)
+    for f1, f4 in zip(futs1, futs4):
+        r1, r4 = f1.result(), f4.result()
+        assert (f1.u, f1.v) == (f4.u, f4.v)
+        assert r1.dist == r4.dist
+        assert np.array_equal(r1.edge_ids, r4.edge_ids)
+        oracle.assert_result(r4)
+    # every replica saw traffic on this trace
+    assert all(rep.stats["submitted"] > 0 for rep in router.replicas)
+    for rep in router.replicas:
+        _accounting(rep)
+    single.close()
+    router.close()
+
+
+def test_hot_keys_cache_on_exactly_one_replica(index):
+    """The cache key is the routing key: a repeated pair caches on its
+    owner only, so summed hot-key bytes across N replicas equal the
+    single-service footprint instead of N copies."""
+    rng = np.random.default_rng(3)
+    hot = {(min(int(u), int(v)), max(int(u), int(v)))
+           for u, v in rng.integers(0, 40, size=(12, 2)) if u != v}
+    us = np.array([k[0] for k in hot], np.int32)
+    vs = np.array([k[1] for k in hot], np.int32)
+
+    single = StreamingService(index, clock=ManualClock(), policy=WIDE,
+                              cache_size=256, cache_policy="hub")
+    single.query_batch(us, vs)          # fills the cache
+    single.query_batch(us, vs)          # pure cache hits
+    single_bytes = single.service.cache.bytes_for(hot)
+    assert single_bytes > 0
+
+    n = 4
+    router = ReplicaRouter(index, n_replicas=n, clocks=_clocks(n),
+                           policy=WIDE, cache_size=256, cache_policy="hub")
+    router.query_batch(us, vs)
+    router.query_batch(us, vs)
+    for key in hot:
+        holders = [i for i, rep in enumerate(router.replicas)
+                   if key in rep.service.cache]
+        assert holders == [router.owner_of(*key)]   # exactly the owner
+    summed = sum(rep.service.cache.bytes_for(hot)
+                 for rep in router.replicas)
+    assert summed == single_bytes                   # partitioned, not copied
+    assert summed < n * single_bytes
+    assert sum(rep.service.cache.hits for rep in router.replicas) \
+        == single.service.cache.hits > 0
+    single.close()
+    router.close()
+
+
+# ---------------------------------------------------------------- handoff
+
+
+def test_drain_replica_hands_off_pending_without_loss(index, monkeypatch):
+    """Sub-chunk pending batches (no size trigger, no clock advance) sit
+    in the backlog; draining their owner re-homes every pair and, after
+    the final drain, each future resolved exactly once with the oracle
+    answer."""
+    resolve_counts: dict[int, int] = {}
+    orig = QueryFuture._resolve
+
+    def counting(self, *a, **kw):
+        resolve_counts[id(self)] = resolve_counts.get(id(self), 0) + 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(QueryFuture, "_resolve", counting)
+
+    clks = _clocks(3)
+    router = ReplicaRouter(index, n_replicas=3, clocks=clks, policy=WIDE,
+                           qos=QOS, cache_size=64)
+    rng = np.random.default_rng(29)
+    us, vs = _pairs(rng, 40, 12)
+    futs = router.submit_batch(us, vs, qos="bulk")
+    pending = {i: rep.n_pending for i, rep in enumerate(router.replicas)}
+    victim = max(pending, key=pending.get)
+    assert pending[victim] > 0                      # backlog actually held
+
+    handed = router.drain_replica(victim)
+    assert handed == pending[victim]
+    assert router.stats["drains"] == 1
+    assert router.stats["handoffs"] == handed
+    assert router.replicas[victim].stats["handed_off"] == handed
+    assert router.replicas[victim].n_pending == 0
+    assert victim not in router.live_replicas()
+    # handed-off pairs now route (and later cache) on the survivors
+    for u, v in zip(us.tolist(), vs.tolist()):
+        assert router.owner_of(u, v) != victim
+
+    router.drain()
+    oracle = OracleCache(index.graph)
+    for f in futs:
+        assert f.done()
+        assert resolve_counts.get(id(f), 0) == 1    # never dropped/doubled
+        oracle.assert_result(f.result())
+    for rep in router.replicas:
+        _accounting(rep)
+    router.close()
+
+
+def test_drain_replica_resolves_inflight_in_place(index, monkeypatch):
+    """Pairs already dispatched (in the async window) are NOT handed off:
+    the drain resolves them on the draining replica itself."""
+    resolve_counts: dict[int, int] = {}
+    orig = QueryFuture._resolve
+
+    def counting(self, *a, **kw):
+        resolve_counts[id(self)] = resolve_counts.get(id(self), 0) + 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(QueryFuture, "_resolve", counting)
+
+    router = ReplicaRouter(
+        index, n_replicas=2, clocks=_clocks(2),
+        policy=AdmissionPolicy(adaptive=False, chunk=2, min_chunk=2),
+        async_depth=8, cache_size=64)
+    rng = np.random.default_rng(31)
+    us, vs = _pairs(rng, 40, 10)
+    futs = router.submit_batch(us, vs)
+    inflight = {i: rep.n_inflight for i, rep in enumerate(router.replicas)}
+    victim = max(inflight, key=inflight.get)
+    assert inflight[victim] > 0
+
+    pending_before = router.replicas[victim].n_pending
+    handed = router.drain_replica(victim)
+    assert handed == pending_before                 # in-flight stayed put
+    assert router.replicas[victim].n_inflight == 0  # resolved by the drain
+    router.drain()
+    oracle = OracleCache(index.graph)
+    for f in futs:
+        assert resolve_counts.get(id(f), 0) == 1
+        oracle.assert_result(f.result())
+    for rep in router.replicas:
+        _accounting(rep)
+    router.close()
+
+
+def test_handoff_preserves_deadlines_on_the_adopter(index):
+    """An adopted pair keeps its original deadline: the new owner's timer
+    resolves it within the class bound (simulated time)."""
+    clks = _clocks(2)
+    router = ReplicaRouter(index, n_replicas=2, clocks=clks, policy=WIDE,
+                           qos=QOS)
+    rng = np.random.default_rng(37)
+    us, vs = _pairs(rng, 40, 6)
+    futs = router.submit_batch(us, vs, qos="interactive")
+    victims = [i for i, rep in enumerate(router.replicas)
+               if rep.n_pending > 0]
+    router.drain_replica(victims[0])
+    _advance(clks, 0.003)                           # past max_wait=0.002
+    assert all(f.done() for f in futs)              # timer, not drain
+    survivor = router.replicas[1 - victims[0]]
+    waits = survivor.qos_stats["interactive"]["waits"]
+    assert waits and all(w <= 0.002 + 1e-9 for w in waits)
+    router.close()
+
+
+def test_drain_guards_and_restore(index):
+    router = ReplicaRouter(index, n_replicas=2, clocks=_clocks(2),
+                           policy=WIDE)
+    baseline = {(u, v): router.owner_of(u, v)
+                for u in range(8) for v in range(u + 1, 10)}
+    router.drain_replica(0)
+    with pytest.raises(ValueError, match="already draining"):
+        router.drain_replica(0)
+    with pytest.raises(ValueError, match="last live"):
+        router.drain_replica(1)
+    assert router.live_replicas() == [1]
+    assert all(router.owner_of(u, v) == 1 for u, v in baseline)
+    router.restore_replica(0)
+    with pytest.raises(ValueError, match="already live"):
+        router.restore_replica(0)
+    # consistent hashing: restoring returns the exact original placement
+    assert {k: router.owner_of(*k) for k in baseline} == baseline
+    assert router.stats["drains"] == 1 and router.stats["restores"] == 1
+    router.close()
+
+
+def test_router_context_manager_and_single_replica(index):
+    with ReplicaRouter(index, n_replicas=1, clocks=_clocks(1),
+                       policy=WIDE) as router:
+        res = router.query_batch([1, 2], [3, 4])
+        oracle = OracleCache(index.graph)
+        for r in res:
+            oracle.assert_result(r)
+        with pytest.raises(ValueError, match="last live"):
+            router.drain_replica(0)
+        assert router.stats["routed"] == 2
