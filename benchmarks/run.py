@@ -65,6 +65,7 @@ def main() -> None:
         coverage,
         distance_dist,
         frontier_relay,
+        graph_updates,
         label_size,
         qos_scheduler,
         query_time,
@@ -91,6 +92,7 @@ def main() -> None:
         (streaming_admission, {}),
         (qos_scheduler, {}),
         (trace_replay, {}),
+        (graph_updates, {}),
         (roofline, {}),
         (sharded_memory, {}),
     ):

@@ -93,10 +93,16 @@ def _row_key(row: dict) -> tuple:
 def compare(baseline: dict, current: dict, threshold: float,
             min_us: float = 50.0, frac_floor: float = 0.01,
             shard_frac_ceiling: float = 0.25,
-            p99_ceiling_us: dict[str, float] | None = None) -> tuple[list, list]:
-    """Compare two ``load_latest`` maps.  Returns ``(regressions, notes)``
-    where each regression is a dict with the offending row key, metric,
-    baseline/current values and the ratio.
+            p99_ceiling_us: dict[str, float] | None = None,
+            update_speedup_floor: float = 5.0,
+            ) -> tuple[list, list, list]:
+    """Compare two ``load_latest`` maps.  Returns ``(regressions, notes,
+    retired)`` where each regression is a dict with the offending row key,
+    metric, baseline/current values and the ratio, and ``retired`` lists
+    baseline rows with no structural counterpart in the current file — a
+    row key that changed shape across PRs is *retired*, reported but never
+    fatal, so a baseline refresh can't silently mask regressions in the
+    rows that do still match.
 
     Rows whose *baseline* latency sits under ``min_us`` are skipped
     entirely: sub-tens-of-microseconds timings are cache-hit hot loops
@@ -121,10 +127,16 @@ def compare(baseline: dict, current: dict, threshold: float,
     deterministic tail latency per QoS class) are gated by an absolute
     per-class ceiling from ``p99_ceiling_us`` (``parse_p99_spec``): the
     row's ``qos`` field selects its bound, falling back to the ``*``
-    entry.  ``p50_us`` rides along untracked."""
+    entry.  ``p50_us`` rides along untracked.
+
+    Rows carrying ``update_speedup`` (``benchmarks/graph_updates.py`` —
+    incremental label maintenance vs the full-rebuild branch) are gated
+    by an absolute floor: the gate fails when the measured speedup drops
+    below ``update_speedup_floor`` (default 5), machine speed having been
+    normalized out of the ratio."""
     p99_ceiling_us = (p99_ceiling_us if p99_ceiling_us is not None
                       else parse_p99_spec(None))
-    regressions, notes = [], []
+    regressions, notes, retired = [], [], []
     for rec_key, base_rec in sorted(baseline.items(), key=str):
         cur_rec = current.get(rec_key)
         if cur_rec is None:
@@ -142,8 +154,19 @@ def compare(baseline: dict, current: dict, threshold: float,
                 continue
             cur_row = cur_rows.get(key)
             if cur_row is None:
-                notes.append(f"no current row for {dict(key)} (skipped)")
+                retired.append({"bench": rec_key[0], "scale": rec_key[1],
+                                "row": dict(key)})
                 continue
+            if "update_speedup" in cur_row:
+                speedup = float(cur_row["update_speedup"])
+                if speedup < update_speedup_floor:
+                    regressions.append({
+                        "bench": rec_key[0], "scale": rec_key[1],
+                        "row": dict(key), "metric": "update_speedup",
+                        "baseline": update_speedup_floor, "current": speedup,
+                        "ratio": speedup / max(update_speedup_floor, 1e-12),
+                    })
+                continue   # absolute-floor rows never hit the relative rule
             if "roofline_frac" in cur_row:
                 frac = float(cur_row["roofline_frac"])
                 if frac < frac_floor:
@@ -191,7 +214,7 @@ def compare(baseline: dict, current: dict, threshold: float,
                         "row": dict(key), "metric": metric,
                         "baseline": base, "current": cur, "ratio": ratio,
                     })
-    return regressions, notes
+    return regressions, notes, retired
 
 
 def main(argv=None) -> int:
@@ -212,6 +235,11 @@ def main(argv=None) -> int:
                          "the vertex-sharded index (fail iff current > "
                          "ceiling; default 0.25 = linear scaling on >= 4 "
                          "effective shards)")
+    ap.add_argument("--update-speedup-floor", type=float, default=5.0,
+                    help="absolute floor for update_speedup rows from "
+                         "graph_updates (fail iff current < floor; "
+                         "default 5 = incremental maintenance must beat "
+                         "the full-rebuild branch five-fold)")
     ap.add_argument("--p99-ceiling-us", default=None, metavar="SPEC",
                     help="absolute ceiling(s) for p99_us rows from "
                          "trace_replay: a bare number for every class or "
@@ -250,14 +278,21 @@ def main(argv=None) -> int:
     if not baseline:
         print(f"bench gate: no baseline at {args.baseline}; nothing to gate")
         return 0
-    regressions, notes = compare(baseline, current, args.threshold,
-                                 min_us=args.min_us,
-                                 frac_floor=args.frac_floor,
-                                 shard_frac_ceiling=args.shard_frac_ceiling,
-                                 p99_ceiling_us=parse_p99_spec(
-                                     args.p99_ceiling_us))
+    regressions, notes, retired = compare(
+        baseline, current, args.threshold,
+        min_us=args.min_us,
+        frac_floor=args.frac_floor,
+        shard_frac_ceiling=args.shard_frac_ceiling,
+        p99_ceiling_us=parse_p99_spec(args.p99_ceiling_us),
+        update_speedup_floor=args.update_speedup_floor)
     for note in notes:
         print(f"bench gate: {note}")
+    if retired:
+        print(f"bench gate: {len(retired)} retired baseline row(s) with no "
+              f"structural counterpart (reported, not fatal — refresh the "
+              f"baseline to drop them):")
+        for r in retired:
+            print(f"  RETIRED {r['bench']}@scale={r['scale']} {r['row']}")
     failing = sorted({r["bench"] for r in regressions})
     if args.emit_failures is not None:
         args.emit_failures.write_text(",".join(failing))

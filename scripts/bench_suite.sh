@@ -25,6 +25,7 @@ benches=(
   streaming_admission
   qos_scheduler
   trace_replay
+  graph_updates
   label_size
   roofline
   sharded_memory

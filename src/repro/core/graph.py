@@ -120,6 +120,61 @@ def from_edges(
     return Graph(jnp.asarray(indptr), jnp.asarray(s), jnp.asarray(d))
 
 
+def edge_set(graph: Graph) -> np.ndarray:
+    """Host-side ``(M, 2)`` canonical undirected edge array (lo < hi, sorted
+    lexicographically) of the real edges in ``graph`` — the inverse of
+    ``from_edges`` up to padding.  Padding self-loop slots are excluded, so
+    the result depends only on the edge *set*, never on pad capacity."""
+    s = np.asarray(graph.src, np.int64)
+    d = np.asarray(graph.dst, np.int64)
+    real = s < d  # one orientation per undirected edge; drops self-loop pads
+    return np.stack([s[real], d[real]], axis=1)
+
+
+def edge_keys(edges: np.ndarray, n_vertices: int) -> np.ndarray:
+    """Canonical sorted int64 keys (``lo * V + hi``, self-loops dropped) for
+    an (M, 2) undirected edge array — the set-algebra currency shared by
+    ``apply_edge_updates`` and ``QbSIndex.apply_update``."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    if edges.size and (edges.min() < 0 or edges.max() >= n_vertices):
+        raise ValueError(f"edge endpoint out of range for {n_vertices} vertices")
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    return np.unique(lo * np.int64(n_vertices) + hi)
+
+
+def apply_edge_updates(
+    graph: Graph,
+    inserts: np.ndarray | None = None,
+    deletes: np.ndarray | None = None,
+) -> Graph:
+    """Rebuild a ``Graph`` with ``inserts`` added and ``deletes`` removed
+    (an edge in both is inserted — inserts win).
+
+    Capacity-preserving: the new CSR keeps the old vertex count and edge-slot
+    capacity (doubling the slot capacity only when the new edge set
+    overflows it), so jitted consumers with static shapes keep their
+    compilation cache across epochs.  Because ``from_edges`` canonicalizes
+    deterministically, the resulting edge-slot ids for the surviving edges
+    depend only on the edge set — an independently rebuilt graph over the
+    same edges is bit-identical.
+    """
+    n_v = graph.n_vertices
+    cur = edge_set(graph)
+    keys = cur[:, 0] * np.int64(n_v) + cur[:, 1]
+    if deletes is not None:
+        dk = edge_keys(deletes, n_v)
+        keys = keys[~np.isin(keys, dk)]
+    if inserts is not None:
+        keys = np.union1d(keys, edge_keys(inserts, n_v))
+    new_edges = np.stack([keys // n_v, keys % n_v], axis=1)
+    cap = graph.n_edges
+    while cap < 2 * len(keys):
+        cap = max(2 * cap, 2)
+    return from_edges(new_edges, n_v, pad_vertices_to=n_v, pad_edges_to=cap)
+
+
 def to_networkx(graph: Graph):
     import networkx as nx
 

@@ -29,6 +29,7 @@ import numpy as np
 
 from .frontier import FrontierEngine, make_relay
 from .graph import INF, Graph
+from .packing import pad_width
 
 
 class LabellingScheme(NamedTuple):
@@ -57,20 +58,25 @@ class LabellingScheme(NamedTuple):
         return pack_labelling(self, lm_dist=lm_dist)
 
 
-@partial(jax.jit, static_argnames=("max_levels",))
-def _build_labelling_arrays(
+def _bfs_rows(
     engine: FrontierEngine,
-    landmarks: jax.Array,
+    roots: jax.Array,
     is_landmark: jax.Array,
     max_levels: int,
 ):
-    R = landmarks.shape[0]
+    """Level-synchronous (depth, reach_L) BFS rows from ``roots``.
+
+    Each row is independent of the others (the frontier is per-row), so a
+    subset of roots computes bit-identical rows to the full-R build — the
+    property the incremental update path (``update_labelling``) relies on.
+    """
+    K = roots.shape[0]
     V = engine.n_vertices
 
-    depth0 = jnp.full((R, V), INF, jnp.int32).at[jnp.arange(R), landmarks].set(0)
-    reach0 = jnp.zeros((R, V), bool).at[jnp.arange(R), landmarks].set(True)
+    depth0 = jnp.full((K, V), INF, jnp.int32).at[jnp.arange(K), roots].set(0)
+    reach0 = jnp.zeros((K, V), bool).at[jnp.arange(K), roots].set(True)
     # roots may relay L-messages even though they are landmarks
-    is_root = jnp.zeros((R, V), bool).at[jnp.arange(R), landmarks].set(True)
+    is_root = jnp.zeros((K, V), bool).at[jnp.arange(K), roots].set(True)
     propagate_ok = (~is_landmark)[None, :] | is_root
 
     def cond(carry):
@@ -81,8 +87,11 @@ def _build_labelling_arrays(
         depth, reach_l, level, _ = carry
         frontier = depth == level
         prop_l = frontier & reach_l & propagate_ok
-        msg_vis = engine.relay(frontier)
-        msg_l = engine.relay(prop_l)
+        # one fused relay for both message kinds: the per-call fixed cost
+        # dominates at small K (the incremental-update path), and rows are
+        # independent so stacking changes nothing
+        msg = engine.relay(jnp.concatenate([frontier, prop_l], axis=0))
+        msg_vis, msg_l = msg[:K], msg[K:]
         new = msg_vis & (depth == INF)
         depth = jnp.where(new, level + 1, depth)
         reach_l = reach_l | (new & msg_l)
@@ -91,6 +100,18 @@ def _build_labelling_arrays(
     depth, reach_l, _, _ = jax.lax.while_loop(
         cond, body, (depth0, reach0, jnp.int32(0), jnp.bool_(True))
     )
+    return depth, reach_l
+
+
+@partial(jax.jit, static_argnames=("max_levels",))
+def _build_labelling_arrays(
+    engine: FrontierEngine,
+    landmarks: jax.Array,
+    is_landmark: jax.Array,
+    max_levels: int,
+):
+    R = landmarks.shape[0]
+    depth, reach_l = _bfs_rows(engine, landmarks, is_landmark, max_levels)
 
     # Labels only for non-landmarks reached via a landmark-free path.
     valid = reach_l & (~is_landmark)[None, :]
@@ -109,6 +130,28 @@ def _build_labelling_arrays(
     return label_dist, meta_w, meta_dist
 
 
+@partial(jax.jit, static_argnames=("max_levels",))
+def _build_labelling_rows(
+    engine: FrontierEngine,
+    roots: jax.Array,
+    landmarks: jax.Array,
+    is_landmark: jax.Array,
+    max_levels: int,
+):
+    """The incremental-update slice of the build: BFS rows for a (padded)
+    subset of landmark roots on the post-update graph, returning exactly the
+    pieces ``update_labelling`` scatters back into the old scheme — depth
+    rows ``(K, V)`` (the new lm_dist rows), label columns ``(V, K)`` and
+    raw (pre-symmetrization) meta rows ``(K, R)``."""
+    depth, reach_l = _bfs_rows(engine, roots, is_landmark, max_levels)
+    valid = reach_l & (~is_landmark)[None, :]
+    label_cols = jnp.where(valid, depth, INF).T.astype(jnp.int32)   # (V, K)
+    at_land = depth[:, landmarks]
+    l_at_land = reach_l[:, landmarks]
+    meta_rows = jnp.where(l_at_land, at_land, INF).astype(jnp.int32)  # (K, R)
+    return depth, label_cols, meta_rows
+
+
 def meta_apsp(meta_w: jax.Array) -> jax.Array:
     """Min-plus APSP (Floyd-Warshall) on the meta-graph. d_M == d_G between
     landmarks (meta edges are exact distances; every landmark-to-landmark
@@ -122,6 +165,11 @@ def meta_apsp(meta_w: jax.Array) -> jax.Array:
 
     d = jax.lax.fori_loop(0, R, body, d0)
     return jnp.minimum(d, INF)
+
+
+# Standalone jitted entry for host callers (update_labelling); the build
+# path traces meta_apsp inside its own jitted program.
+_meta_apsp_j = jax.jit(meta_apsp)
 
 
 def build_labelling(
@@ -147,6 +195,206 @@ def build_labelling(
         meta_w=meta_w,
         meta_dist=meta_dist,
     )
+
+
+# ---------------------------------------------------------------------------
+# Incremental maintenance (DESIGN.md §13): affected-landmark recompute.
+# ---------------------------------------------------------------------------
+
+
+def affected_landmarks(
+    scheme: LabellingScheme,
+    lm_dist: np.ndarray,
+    graph_new: Graph,
+    inserts: np.ndarray | None = None,
+    deletes: np.ndarray | None = None,
+) -> np.ndarray:
+    """``(R,)`` bool mask of landmarks whose BFS row an update batch touches.
+
+    ``lm_dist`` is the exact pre-update ``(R, V)`` distance table,
+    ``graph_new`` the post-batch graph, and ``inserts``/``deletes`` the
+    *effective* delta (insert-of-absent / delete-of-present edges only —
+    ``QbSIndex.apply_update`` filters).  Per landmark r and edge (a, b)
+    with a the endpoint nearer r, the criteria are exact, not heuristic:
+
+    * ``|d(r,a) - d(r,b)| >= 2`` insert: distances shorten — affected.
+    * equal depths (or both INF): the edge joins or leaves no shortest
+      path from r (any path through it is strictly longer) — unchanged.
+    * ``diff == 1`` insert: depths are unchanged (the new path ties);
+      only the shortest-path DAG gains the edge a -> b, whose reach_L
+      contribution is ``reach_L(a) & propagate_ok(a)``.  The row changes
+      only if that contribution is live *and* b lacked the L-bit:
+      ``reach_L(a) & ok(a) & ~reach_L(b)``.
+    * ``diff == 1`` delete: affected if b loses its last surviving
+      shortest predecessor (checked against ``graph_new``'s CSR — so two
+      deletes in one batch cannot alibi each other), or if the removed
+      DAG edge carried a live L-contribution into a reached b *and* no
+      surviving predecessor still contributes one:
+      ``reach_L(a) & ok(a) & reach_L(b) & ~l_keep(b)``.
+
+    reach_L is read off the existing tables: ``label_dist[x, r] < INF``
+    for non-landmark x, ``meta_w[r, lid[x]] < INF`` for landmark x (row
+    r's own root is True); ``propagate_ok`` is false exactly for
+    non-root landmarks, which never relay L-messages.  Label sparsity is
+    what makes this tight on hub-heavy graphs: most diff==1 edges hang
+    off landmark-shadowed vertices and flag nothing.
+
+    Batch-exactness: if no edge flags row r, induction over depth levels
+    shows the BFS depth table and then the reach_L fixpoint of row r are
+    preserved edge-by-edge (every insert ties or lands on a dead
+    contribution, every delete leaves a supporting predecessor and
+    removes only dead or redundant contributions).  Flagged rows are
+    recomputed exactly on ``graph_new``.
+    """
+    lm = np.asarray(lm_dist)
+    R = lm.shape[0]
+    aff = np.zeros((R,), bool)
+    label = np.asarray(scheme.label_dist)        # (V, R)
+    meta_w = np.asarray(scheme.meta_w)           # (R, R)
+    lid = np.asarray(scheme.lid)
+    is_lm = np.asarray(scheme.is_landmark)
+    indptr = np.asarray(graph_new.indptr)
+    dst = np.asarray(graph_new.dst)
+
+    def reach(x: int) -> np.ndarray:
+        """(R,) reach_L[r, x]: a landmark-interior-free shortest r-x path."""
+        if is_lm[x]:
+            out = meta_w[:, lid[x]] < INF
+            out[lid[x]] = True                   # own root
+            return out
+        return label[x, :] < INF
+
+    def contrib(x: int) -> np.ndarray:
+        """(R,) live L-contribution of x: reach_L & propagate_ok."""
+        if is_lm[x]:
+            out = np.zeros((R,), bool)
+            out[lid[x]] = True                   # roots relay their own bit
+            return out
+        return label[x, :] < INF
+
+    def _pairs(arr):
+        if arr is None:
+            return ()
+        arr = np.asarray(arr, np.int64).reshape(-1, 2)
+        return [(int(a), int(b)) for a, b in arr]
+
+    for u, v in _pairs(inserts):
+        du, dv = lm[:, u], lm[:, v]
+        gap = np.abs(du - dv)
+        rows = gap >= 2
+        one = gap == 1
+        if one.any():
+            cu, cv, ru, rv = contrib(u), contrib(v), reach(u), reach(v)
+            a_is_u = du < dv                     # a = nearer endpoint
+            rows = rows | (one & np.where(a_is_u, cu & ~rv, cv & ~ru))
+        aff |= rows
+
+    def _pred_keep(x: int, dx: np.ndarray):
+        """For farther endpoint x: (R,) has-surviving-shortest-predecessor
+        and (R,) some survivor still carries a live L-contribution."""
+        nb = dst[indptr[x]:indptr[x + 1]]
+        nb = nb[nb != x]                         # drop self-loop padding
+        if not nb.size:
+            z = np.zeros((R,), bool)
+            return z, z
+        at_depth = lm[:, nb] == (dx - 1)[:, None]        # (R, deg)
+        contrib_nb = (label[nb, :] < INF).T              # (R, deg)
+        lm_nb = np.nonzero(is_lm[nb])[0]
+        for j in lm_nb:                                  # landmark neighbors:
+            contrib_nb[lid[nb[j]], j] = True             # roots relay own bit
+        return at_depth.any(axis=1), (at_depth & contrib_nb).any(axis=1)
+
+    for u, v in _pairs(deletes):
+        du, dv = lm[:, u], lm[:, v]
+        one = np.abs(du - dv) == 1               # real edges: gap <= 1
+        if not one.any():
+            continue
+        cu, cv, ru, rv = contrib(u), contrib(v), reach(u), reach(v)
+        a_is_u = du < dv
+        pred_u, keep_u = _pred_keep(u, du)
+        pred_v, keep_v = _pred_keep(v, dv)
+        orphaned = np.where(a_is_u, ~pred_v, ~pred_u)
+        l_loss = np.where(a_is_u, cu & rv & ~keep_v, cv & ru & ~keep_u)
+        aff |= one & (orphaned | l_loss)
+    return aff
+
+
+def update_labelling(
+    graph_new: Graph,
+    scheme: LabellingScheme,
+    lm_dist: np.ndarray,
+    inserts: np.ndarray | None = None,
+    deletes: np.ndarray | None = None,
+    *,
+    max_levels: int = 256,
+    backend: str = "segment",
+    engine: FrontierEngine | None = None,
+    churn_threshold: float = 0.5,
+    **engine_kw,
+) -> tuple[LabellingScheme | None, np.ndarray | None, dict]:
+    """Incrementally maintain a labelling across one edge-update batch.
+
+    Returns ``(scheme_new, lm_dist_new, info)`` where both tables are
+    bit-identical to a fresh ``build_labelling`` on ``graph_new`` (the
+    property-harness contract).  When the affected fraction exceeds
+    ``churn_threshold`` the incremental path loses to a rebuild; the
+    function returns ``(None, None, info)`` with ``info["full_rebuild"]``
+    set and the caller rebuilds.  ``info["affected"]`` holds the affected
+    landmark indices either way.
+    """
+    lm = np.asarray(lm_dist, np.int32)
+    R = scheme.n_landmarks
+    aff = affected_landmarks(scheme, lm, graph_new, inserts, deletes)
+    idx = np.nonzero(aff)[0].astype(np.int32)
+    info = {"affected": idx, "full_rebuild": False, "n_affected": int(idx.size)}
+    if idx.size == 0:
+        return scheme, lm, info
+    if idx.size > churn_threshold * R:
+        info["full_rebuild"] = True
+        return None, None, info
+
+    if engine is None:
+        engine = make_relay(graph_new, backend=backend, **engine_kw)
+    # Pad the root subset to the pad_width ladder so the jit cache sees a
+    # log-bounded set of shapes; duplicate rows recompute identical values,
+    # so scattering the padded set (duplicates included) is exact.
+    K = int(idx.size)
+    k_pad = pad_width(K)
+    idx_pad = np.concatenate([idx, np.full((k_pad - K,), idx[0], np.int32)])
+    roots_pad = np.asarray(scheme.landmarks)[idx_pad]
+    depth, label_cols, meta_rows = _build_labelling_rows(
+        engine, jnp.asarray(roots_pad, jnp.int32), scheme.landmarks,
+        scheme.is_landmark, max_levels)
+    # label_cols stays on device: the (V, R) table is scattered in place
+    # rather than round-tripped through the host.
+    label_dist = jnp.asarray(scheme.label_dist).at[
+        :, jnp.asarray(idx_pad)].set(label_cols)
+    depth = np.asarray(depth)[:K]              # (K, V) — new lm_dist rows
+    meta_rows = np.asarray(meta_rows)[:K]      # (K, R) raw, diag carries 0
+    # Raw meta values are symmetric (reach_L is a symmetric property), and
+    # an entry (i, j) only changes when d(r_i, r_j) or its L-bit moves —
+    # which flags *both* rows.  So scattering the recomputed rows into both
+    # the rows and columns of the affected set, resetting the (affected)
+    # diagonal to INF and re-harmonizing with the transpose reproduces the
+    # fresh build's meta_w exactly.
+    meta_w = np.asarray(scheme.meta_w).copy()
+    meta_w[idx, :] = meta_rows
+    meta_w[:, idx] = meta_rows.T
+    meta_w[idx, idx] = INF
+    meta_w = np.minimum(meta_w, meta_w.T)
+    meta_dist = _meta_apsp_j(jnp.asarray(meta_w))
+
+    lm_new = lm.copy()
+    lm_new[idx] = depth
+    scheme_new = LabellingScheme(
+        landmarks=scheme.landmarks,
+        lid=scheme.lid,
+        is_landmark=scheme.is_landmark,
+        label_dist=label_dist,
+        meta_w=jnp.asarray(meta_w),
+        meta_dist=meta_dist,
+    )
+    return scheme_new, lm_new, info
 
 
 def labelling_size_bytes(scheme: LabellingScheme) -> dict:

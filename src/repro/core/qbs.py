@@ -43,16 +43,23 @@ sketch kernel.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import cached_property, lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .frontier import bfs_depths_batch, make_relay
-from .graph import INF, Graph, select_landmarks
-from .labelling import LabellingScheme, build_labelling
-from .packing import pack_labelling, widen_dist
+from .graph import (
+    INF,
+    Graph,
+    apply_edge_updates,
+    edge_keys,
+    edge_set,
+    select_landmarks,
+)
+from .labelling import LabellingScheme, build_labelling, update_labelling
+from .packing import pack_labelling, patch_packed, widen_dist
 from .search import (
     Query,
     guided_search,
@@ -170,13 +177,47 @@ def _landmark_onesided_lanes(engine, lm_dist, src, dst, rev_edge,
     return d, mask & (d < INF)[:, None]
 
 
+@lru_cache(maxsize=None)
+def _make_search_batch(n_vertices: int, max_levels: int, max_chain: int,
+                       use_pallas: bool):
+    """General-lane search program, cached on its static configuration so
+    epoch-advanced indexes (``apply_update`` — same V/E capacity, new
+    tables) reuse the compiled program instead of re-jitting per index."""
+    searcher = partial(
+        guided_search, n_vertices=n_vertices,
+        max_levels=max_levels, max_chain=max_chain,
+    )
+
+    def search_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
+        # gather the *packed* rows from HBM; compute_sketch_batch
+        # widens them (and the packed meta tables) in registers
+        lu = label_dist[us]
+        lv = label_dist[vs]
+        sk = compute_sketch_batch(lu, lv, meta_w, meta_dist,
+                                  use_pallas=use_pallas)
+        queries = Query(
+            u=us, v=vs, d_top=sk.d_top,
+            du_land=sk.du_land, dv_land=sk.dv_land,
+            meta_edge=sk.meta_edge,
+            d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
+        )
+        res = jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
+        return res.dist, res.edge_mask
+
+    # Chained with the module-level _symmetrize program in serve_step:
+    # two jit dispatches, everything on device, no host sync (see
+    # _symmetrize for why the gather is not fused in here).
+    return jax.jit(search_batch)
+
+
 class QbSIndex:
     is_sharded = False   # replicated tables; core.sharded.ShardedIndex flips it
 
     def __init__(self, graph: Graph, scheme: LabellingScheme, *,
                  max_levels: int = 512, max_chain: int = 512, chunk: int = 32,
                  use_pallas: bool = True, backend: str = "segment",
-                 engine_opts: dict | None = None):
+                 engine_opts: dict | None = None,
+                 epoch: int = 0, lm_dist=None, packed=None):
         self.graph = graph
         self.scheme = scheme
         self.max_levels = max_levels
@@ -187,19 +228,31 @@ class QbSIndex:
         # rebuild the index to switch sketch paths or relay backends.
         self.use_pallas = use_pallas
         self.backend = backend
+        # Epoch of the graph this index answers for (DESIGN.md §13); an
+        # ``apply_update`` batch returns a new index at ``epoch + 1``,
+        # stamping how the update resolved (affected set / rebuild) here.
+        self.epoch = epoch
+        self.last_update_info: dict = {}
 
         engine_opts = engine_opts or {}
+        self._engine_opts = dict(engine_opts)
         # (R, V) exact vertex-to-landmark distances, a pure function of the
         # labelling — built once here so the landmark lane steps gather
         # rows instead of re-reducing the label matrix every chunk.
-        lm_dist = _dists_to_landmark_batch(
-            scheme.label_dist, scheme.meta_dist, scheme.lid,
-            scheme.is_landmark, jnp.arange(scheme.n_landmarks))
+        # ``apply_update`` passes the incrementally-maintained table in
+        # (bit-identical: both are exact BFS distances with the same INF).
+        if lm_dist is None:
+            lm_dist = _dists_to_landmark_batch(
+                scheme.label_dist, scheme.meta_dist, scheme.lid,
+                scheme.is_landmark, jnp.arange(scheme.n_landmarks))
+        self._lm_dist_host = np.asarray(lm_dist, np.int32)
         # The packed label tables (uint8/uint16 + INF sentinel, dtype chosen
         # from the measured diameter — core.packing, DESIGN.md §10) are what
         # HBM holds; every jit consumer below widens gathered rows in
         # registers.  The int32 scheme stays the host-side build artifact.
-        self.packed = pack_labelling(scheme, lm_dist=lm_dist)
+        if packed is None:
+            packed = pack_labelling(scheme, lm_dist=jnp.asarray(lm_dist))
+        self.packed = packed
         self._lm_dist = self.packed.lm_dist
         self.ctx = make_search_context(graph, scheme, backend=backend,
                                        packed=self.packed, **engine_opts)
@@ -207,40 +260,24 @@ class QbSIndex:
         # shortest paths may pass *through* landmarks, so G- is wrong there).
         self._full_engine = make_relay(graph, backend=backend, **engine_opts)
         is_l = scheme.is_landmark
-        self._rev_edge = _reverse_edge_map(
-            np.asarray(graph.src), np.asarray(graph.dst), graph.n_vertices
-        )
-        self._rev_edge_j = jnp.asarray(self._rev_edge)
         self._is_landmark_np = np.asarray(is_l)
         self._lid_np = np.asarray(scheme.lid)
         self._service = None
 
-        v = graph.n_vertices
-        searcher = partial(
-            guided_search, n_vertices=v,
-            max_levels=max_levels, max_chain=max_chain,
-        )
+        self._search_batch = _make_search_batch(
+            graph.n_vertices, max_levels, max_chain, use_pallas)
 
-        def search_batch(ctx, label_dist, meta_w, meta_dist, us, vs):
-            # gather the *packed* rows from HBM; compute_sketch_batch
-            # widens them (and the packed meta tables) in registers
-            lu = label_dist[us]
-            lv = label_dist[vs]
-            sk = compute_sketch_batch(lu, lv, meta_w, meta_dist,
-                                      use_pallas=use_pallas)
-            queries = Query(
-                u=us, v=vs, d_top=sk.d_top,
-                du_land=sk.du_land, dv_land=sk.dv_land,
-                meta_edge=sk.meta_edge,
-                d_star_u=sk.d_star_u, d_star_v=sk.d_star_v,
-            )
-            res = jax.vmap(searcher, in_axes=(None, 0))(ctx, queries)
-            return res.dist, res.edge_mask
+    @cached_property
+    def _rev_edge(self) -> np.ndarray:
+        """Lazy: an O(E log E) host sort the epoch-advance path defers to
+        first query time (update latency should not pay for it)."""
+        return _reverse_edge_map(
+            np.asarray(self.graph.src), np.asarray(self.graph.dst),
+            self.graph.n_vertices)
 
-        # Chained with the module-level _symmetrize program in serve_step:
-        # two jit dispatches, everything on device, no host sync (see
-        # _symmetrize for why the gather is not fused in here).
-        self._search_batch = jax.jit(search_batch)
+    @cached_property
+    def _rev_edge_j(self) -> jax.Array:
+        return jnp.asarray(self._rev_edge)
 
     # -- per-lane device steps ----------------------------------------------
 
@@ -273,6 +310,64 @@ class QbSIndex:
             self._full_engine, self._lm_dist,
             self.graph.src, self.graph.dst, self._rev_edge_j,
             roots, r_idx, max_levels=self.max_levels)
+
+    # -- dynamic updates (DESIGN.md §13) -------------------------------------
+
+    def apply_update(self, inserts=None, deletes=None, *,
+                     churn_threshold: float = 0.5) -> "QbSIndex":
+        """Apply one edge-update batch and return the index for the next
+        epoch (``self`` is untouched — in-flight chunks pinned to it stay
+        bit-consistent with their admission epoch).
+
+        The landmark set is pinned at epoch 0; labels are maintained by
+        recomputing only the affected landmarks' BFS rows on the post-update
+        graph (``labelling.update_labelling``) and patching the packed
+        tables in place (``packing.patch_packed``).  Past
+        ``churn_threshold`` (affected fraction of R) the incremental path
+        loses to a rebuild and we rebuild outright.  Either way the new
+        index's tables are bit-identical to a fresh build on the new graph
+        with the same landmarks — the property-harness contract.
+        """
+        # Reduce the request to its effective delta (insert-of-present and
+        # delete-of-absent edges are no-ops) so phantom edges never flag a
+        # landmark for recompute.
+        n_v = self.graph.n_vertices
+        cur = edge_set(self.graph)
+        present = cur[:, 0] * np.int64(n_v) + cur[:, 1]
+        ins0 = edge_keys(inserts, n_v) if inserts is not None else \
+            np.zeros((0,), np.int64)
+        del0 = edge_keys(deletes, n_v) if deletes is not None else \
+            np.zeros((0,), np.int64)
+        ins = ins0[~np.isin(ins0, present)]           # insert-of-absent only
+        dels = del0[np.isin(del0, present)]           # delete-of-present only
+        dels = dels[~np.isin(dels, ins0)]             # inserts win a tie
+        ins_arr = np.stack([ins // n_v, ins % n_v], axis=1)
+        del_arr = np.stack([dels // n_v, dels % n_v], axis=1)
+
+        graph_new = apply_edge_updates(self.graph, ins_arr, del_arr)
+        scheme_new, lm_new, info = update_labelling(
+            graph_new, self.scheme, self._lm_dist_host, ins_arr, del_arr,
+            backend=self.backend, churn_threshold=churn_threshold,
+            **self._engine_opts)
+        kw = dict(max_levels=self.max_levels, max_chain=self.max_chain,
+                  chunk=self.chunk, use_pallas=self.use_pallas,
+                  backend=self.backend, engine_opts=self._engine_opts,
+                  epoch=self.epoch + 1)
+        if scheme_new is None:  # churn above threshold: full rebuild
+            scheme_new = build_labelling(
+                graph_new, np.asarray(self.scheme.landmarks),
+                backend=self.backend, **self._engine_opts)
+            new = QbSIndex(graph_new, scheme_new, **kw)
+        else:
+            if info["n_affected"]:
+                packed_new = patch_packed(
+                    self.packed, scheme_new, lm_new, info["affected"])
+            else:
+                packed_new = self.packed  # labels untouched; only CSR moved
+            new = QbSIndex(graph_new, scheme_new, lm_dist=lm_new,
+                           packed=packed_new, **kw)
+        new.last_update_info = info
+        return new
 
     # -- construction -------------------------------------------------------
 

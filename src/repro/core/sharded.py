@@ -527,6 +527,8 @@ class ShardedIndex:
     """
 
     is_sharded = True
+    epoch = 0   # sharded tables are build-once; dynamic updates (§13) are
+                # a replicated-index feature — the epoch never advances here
 
     def __init__(self, graph: Graph, labels: ShardedLabels,
                  part: EdgePartition, mesh: Mesh, *,

@@ -26,7 +26,15 @@ many replicas run — pinned by ``tests/test_replica_router.py``).
   times and deadlines), then drains ``i``'s in-flight window so every
   already-dispatched future resolves in place.  No future is dropped or
   double-resolved, and the accounting identity holds per replica
-  (``handed_off`` balances the exported creators).
+  (``handed_off`` balances the exported creators).  Cache residency
+  moves with ownership in both directions: drain ships ``i``'s packed
+  cache entries to the covering peers, restore ships the range's
+  entries back — so neither the drain nor the rejoin serves its hot set
+  cold (the restored-replica p99 spike this tier used to pay).
+* **Epoch fan-out** (DESIGN.md §13).  ``apply_update`` computes the next
+  epoch's index once and installs it on every replica under the router
+  lock, so the tier advances atomically with respect to routing — no
+  two replicas ever serve the same pair from different epochs.
 * **Bit-identity.**  Routing only partitions *which* replica computes a
   pair; every replica serves from the same index, so
   ``ReplicaRouter(n_replicas=N)`` is bit-identical to a single service
@@ -119,6 +127,9 @@ class ReplicaRouter:
             "drains": 0,          # drain_replica calls
             "restores": 0,        # restore_replica calls
             "handoffs": 0,        # pairs re-homed by drains
+            "cache_shipped": 0,   # packed cache entries moved with key
+                                  # ownership (drain + restore warmups)
+            "updates": 0,         # epoch advances fanned out (§13)
         }, what="ReplicaRouter.stats")
         self._lock = san.lock if san is not None else threading.RLock()
         self._qbs = san
@@ -140,7 +151,13 @@ class ReplicaRouter:
             return [i for i, up in enumerate(self._live) if up]
 
     def _owner_locked(self, key: tuple[int, int]) -> int:  # qbslint: locked
-        pts, owners, live = self._ring_points, self._ring_owner, self._live
+        return self._owner_of(key, self._live)
+
+    def _owner_of(self, key: tuple[int, int], live) -> int:
+        """Ring lookup against an explicit liveness vector.  ``_live``
+        callers hold the lock; snapshot callers (``_owner_fn``) pass an
+        immutable copy so the lookup itself is lock-free."""
+        pts, owners = self._ring_points, self._ring_owner
         n = len(pts)
         start = bisect_left(pts, key_point(key)) % n
         for step in range(n):
@@ -148,6 +165,15 @@ class ReplicaRouter:
             if live[i]:
                 return i
         raise RuntimeError("no live replica")
+
+    def _owner_fn(self):
+        """A pure owner-lookup closure over a liveness snapshot — safe to
+        call while holding a *replica's* lock (the cache warm-handoff
+        export predicates), where taking the router lock would invert
+        the router->replica lock order."""
+        with self._lock:
+            live = tuple(self._live)
+        return lambda key: self._owner_of(key, live)
 
     def owner_of(self, u: int, v: int) -> int:
         """Replica index currently owning the canonical pair (u, v)."""
@@ -202,9 +228,11 @@ class ReplicaRouter:
     def drain_replica(self, i: int) -> int:
         """Take replica ``i`` out of rotation for a rolling restart:
         re-route its key range, re-home its pending pairs into the new
-        owners, resolve its in-flight window in place.  Returns the
-        number of pairs handed off.  The replica object stays alive (its
-        cache keeps its entries) — ``restore_replica`` puts it back."""
+        owners, resolve its in-flight window in place, and *move* its
+        packed result-cache entries to the keys' new owners (the warm
+        half of the handoff: re-routed repeat traffic keeps hitting
+        instead of recomputing its hot set cold).  Returns the number of
+        pairs handed off; ``restore_replica`` puts the replica back."""
         with self._lock:
             if not self._live[i]:
                 raise ValueError(f"replica {i} is already draining")
@@ -220,17 +248,72 @@ class ReplicaRouter:
             self.replicas[j].adopt(key, futures, qos=qos, t_enq=t_enq,
                                    deadline=deadline)
         self.replicas[i].drain()       # in-flight pairs resolve in place
+        self._ship_cache_from(i)
         return len(handoff)
 
     def restore_replica(self, i: int) -> None:
         """Return a drained replica to rotation: its key range routes
         back on the next lookup (keys handed off while draining finish
-        where they were adopted)."""
+        where they were adopted), and the range's packed cache entries
+        ship back from the covering peers — without this the restored
+        replica rejoins *cold* and every repeat pair in its range pays a
+        full recompute (the post-restore p99 spike pinned by
+        ``benchmarks/trace_replay.py``)."""
         with self._lock:
             if self._live[i]:
                 raise ValueError(f"replica {i} is already live")
             self._live[i] = True
             self.stats["restores"] += 1
+        # peers covered i's range while it was out; with i live again,
+        # any entry now owned by i moves home (cache keys are epoched
+        # (u, v, epoch) — routing reads the pair, key[:2])
+        owner = self._owner_fn()
+        moved = 0
+        for j, rep in enumerate(self.replicas):
+            if j == i:
+                continue
+            entries = rep.export_cache(
+                pred=lambda key: owner(key[:2]) == i, remove=True)
+            if entries:
+                self.replicas[i].import_cache(entries)
+                moved += len(entries)
+        with self._lock:
+            self.stats["cache_shipped"] += moved
+
+    def _ship_cache_from(self, i: int) -> None:
+        """Move every packed cache entry off replica ``i`` to its key's
+        current owner (``i`` is live=False here, so its range re-routes).
+        Entries land with their packed payloads intact, so the adopting
+        replicas serve the drained hot set from cache immediately."""
+        owner = self._owner_fn()
+        moved = self.replicas[i].export_cache(remove=True)
+        by_owner: dict[int, list] = {}
+        for key, entry in moved:
+            by_owner.setdefault(owner(key[:2]), []).append((key, entry))
+        for j, entries in by_owner.items():
+            self.replicas[j].import_cache(entries)
+        with self._lock:
+            self.stats["cache_shipped"] += len(moved)
+
+    # -- dynamic updates (DESIGN.md §13) -------------------------------------
+
+    def apply_update(self, inserts=None, deletes=None, *,
+                     churn_threshold: float = 0.5):
+        """Advance the whole tier one epoch: compute the next index
+        *once* (incremental label maintenance on the routed index) and
+        install it on every replica — live and draining alike, so a
+        restored replica is never behind the tier's epoch.  Serialized
+        under the router lock: concurrent updates install in epoch order
+        on every replica (router -> replica is the tier's one lock
+        order).  Returns the new index."""
+        with self._lock:
+            new = self.index.apply_update(inserts=inserts, deletes=deletes,
+                                          churn_threshold=churn_threshold)
+            self.index = new
+            for rep in self.replicas:
+                rep.install_index(new)
+            self.stats["updates"] += 1
+        return new
 
     # -- lifecycle -----------------------------------------------------------
 

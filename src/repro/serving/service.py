@@ -13,8 +13,10 @@ The service owns *how* a planned batch runs; the planner owns *what* runs
   seed's strictly synchronous dispatch-then-sync loop and exists as the
   benchmark baseline (``benchmarks.serving_throughput``).
 * **Result cache.**  An optional cache keyed on the canonical pair
-  ``(min(u, v), max(u, v))`` — the same key the planner dedups on — maps
-  to ``(dist, edge_ids)``.  SPGs are orientation-invariant on an
+  ``(min(u, v), max(u, v))`` — the same key the planner dedups on — plus
+  the serving epoch (DESIGN.md §13: a cached SPG from an earlier graph
+  version must never answer a later query), mapping to
+  ``(dist, edge_ids)``.  SPGs are orientation-invariant on an
   undirected graph, so one entry serves both directions.  Cache lookups
   happen at plan time (hit rows leave their lanes before any chunking);
   inserts happen as chunks drain.  ``cache_policy="lru"`` is plain LRU;
@@ -103,7 +105,12 @@ def _unpack_result(entry: tuple) -> tuple[int, np.ndarray]:
 
 
 class ResultCache:
-    """``(dist, edge_ids)`` cache keyed on the canonical query pair.
+    """``(dist, edge_ids)`` cache keyed on the canonical query pair plus
+    the serving epoch (``(u, v, epoch)`` — DESIGN.md §13: an entry
+    computed under one epoch must never answer a query admitted under a
+    later one, so the epoch rides in the key and stale entries simply
+    stop being reachable).  The cache itself is key-shape-agnostic; the
+    ``protect`` predicate only ever reads ``key[0]``/``key[1]``.
 
     Without ``protect`` this is a plain LRU.  With ``protect`` (a predicate
     on the canonical key), ``protected_frac`` of the capacity becomes
@@ -183,9 +190,14 @@ class ResultCache:
         return total
 
     def put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
+        self._insert_packed(key, _pack_result(value))
+
+    def _insert_packed(self, key: tuple, entry: tuple) -> None:
+        """Insert one already-packed ``(nbytes, dist, enc)`` entry — the
+        shared tail of ``put`` and ``import_packed`` (tier choice,
+        demotion, capacity pressure)."""
         if self.capacity == 0:
             return
-        entry = _pack_result(value)
         # a key lives in exactly one tier; re-put refreshes tier + recency
         old = self._store.pop(key, None)
         if old is None:
@@ -205,6 +217,31 @@ class ResultCache:
         if self.capacity_bytes is not None:
             while self.bytes > self.capacity_bytes and len(self):
                 self._evict_one()
+
+    def export_packed(self, pred=None, *, remove: bool = False) -> list:
+        """Export resident entries *packed* — ``[(key, (nbytes, dist,
+        enc)), ...]`` in LRU-to-MRU order, so importing in list order
+        reproduces the recency order here.  ``pred`` filters on the key;
+        ``remove=True`` also evicts the exported entries (a *move*, the
+        replica warm-handoff path: the pair's bytes must live on exactly
+        one replica, matching the routing invariant)."""
+        out = []
+        for tier in (self._store, self._protected):
+            keys = [k for k in tier if pred is None or pred(k)]
+            for k in keys:
+                out.append((k, tier[k]))
+                if remove:
+                    entry = tier.pop(k)
+                    self.bytes -= entry[0]
+        return out
+
+    def import_packed(self, entries) -> None:
+        """Absorb entries exported by a peer's ``export_packed``.  The
+        receiving cache re-applies its *own* tier policy per key (replica
+        tiers are homogeneous, so a hub-protected entry lands protected
+        again) and its own capacity pressure."""
+        for key, entry in entries:
+            self._insert_packed(key, entry)
 
 
 def round_chunk_to_shards(chunk: int, n_shards: int) -> int:
@@ -264,6 +301,11 @@ class ServingService:
             self._seen_once = OrderedDict()
             self._seen_cap = max(64, 4 * min(self.cache.capacity, 1 << 16))
         self.lane_served = [0] * N_LANES   # unique pairs answered per lane
+        # service-level counters (the scheduler's stats live on the
+        # streaming layer); chunk_roundings counts admission-time widths
+        # rounded up to the shard multiple (warned once, counted always)
+        self.stats = {"chunk_roundings": 0, "installs": 0}
+        self._warned_rounding = False
 
         if (mesh is not None or devices is not None) and getattr(
                 index, "is_sharded", False):
@@ -288,21 +330,52 @@ class ServingService:
             mesh = Mesh(np.array(devs), ("q",))
         self._sharded_general = None
         self._n_shards = 1
+        self._mesh = mesh
         if mesh is not None:
             self._n_shards = int(np.prod(list(mesh.shape.values())))
             rounded = round_chunk_to_shards(self.chunk, self._n_shards)
             if rounded != self.chunk:
+                self._warned_rounding = True
                 warnings.warn(
                     f"chunk={self.chunk} does not divide over "
                     f"{self._n_shards} shards; rounding up to {rounded}",
                     stacklevel=2)
                 self.chunk = rounded
-            from ..core.distributed import make_serve_step
-            self._sharded_general = make_serve_step(
-                index.ctx, index.scheme, mesh,
-                n_vertices=index.graph.n_vertices,
-                max_levels=index.max_levels, max_chain=index.max_chain,
-                use_pallas=index.use_pallas, packed=index.packed)
+            self._sharded_general = self._make_sharded_general()
+
+    def _make_sharded_general(self):
+        from ..core.distributed import make_serve_step
+        index = self.index
+        return make_serve_step(
+            index.ctx, index.scheme, self._mesh,
+            n_vertices=index.graph.n_vertices,
+            max_levels=index.max_levels, max_chain=index.max_chain,
+            use_pallas=index.use_pallas, packed=index.packed)
+
+    def install_index(self, index) -> None:
+        """Swap in the next epoch's index (an ``apply_update`` product —
+        DESIGN.md §13).  Chunks dispatched before the swap already hold
+        device handles to the old epoch's tables, so their results stay
+        bit-consistent with their admission epoch; the result cache
+        survives the swap — its keys carry the epoch, so entries written
+        under earlier epochs simply stop being reachable and age out
+        under normal eviction pressure.  The hub-protect predicate stays
+        pinned at construction (landmarks are pinned across epochs; the
+        hub set is an eviction heuristic, not a correctness surface).
+
+        Callers must serialize this against the query entry points —
+        ``StreamingService.install_index`` does, under its scheduler
+        lock; bare services are single-caller by contract."""
+        if getattr(index, "is_sharded", False):
+            raise ValueError("cannot install a sharded index")
+        if index.epoch <= self.index.epoch:
+            raise ValueError(
+                f"install_index: epoch {index.epoch} is not ahead of "
+                f"serving epoch {self.index.epoch}")
+        self.index = index
+        self.stats["installs"] += 1
+        if self._mesh is not None:
+            self._sharded_general = self._make_sharded_general()
 
     def _hub_protect(self, hub_top_frac: float):
         """Protect predicate for the hub-skew cache policy: a canonical
@@ -329,10 +402,25 @@ class ServingService:
         ``chunk`` overrides the service's width for this plan (the
         streaming admission layer picks it adaptively); every jitted lane
         step caches one compile per width, so callers should draw widths
-        from a small fixed set.  Sharded services silently round the
-        override up to the shard multiple."""
-        chunk = (self.chunk if chunk is None
-                 else round_chunk_to_shards(int(chunk), self._n_shards))
+        from a small fixed set.  Sharded services round the override up
+        to the shard multiple — warned once per service instance and
+        counted in ``stats['chunk_roundings']`` every time, so streaming
+        traffic with a misaligned adaptive ladder shows up in metrics
+        instead of spamming one warning per admission."""
+        if chunk is None:
+            chunk = self.chunk
+        else:
+            rounded = round_chunk_to_shards(int(chunk), self._n_shards)
+            if rounded != chunk:
+                self.stats["chunk_roundings"] += 1
+                if not self._warned_rounding:
+                    self._warned_rounding = True
+                    warnings.warn(
+                        f"admitted chunk={chunk} does not divide over "
+                        f"{self._n_shards} shards; rounding up to "
+                        f"{rounded} (warned once; see "
+                        f"stats['chunk_roundings'])", stacklevel=2)
+            chunk = rounded
         idx = self.index
         lid = idx._lid_np
 
@@ -388,11 +476,13 @@ class ServingService:
         if self.cache is None:
             return plan, []
         hits = []
+        epoch = self.index.epoch
         lanes = list(plan.lanes)
         for k in (LANE_LANDMARK_PAIR, LANE_ONE_SIDED, LANE_GENERAL):
             miss = []
             for row in lanes[k]:
-                got = self.cache.get((int(plan.cu[row]), int(plan.cv[row])))
+                got = self.cache.get(
+                    (int(plan.cu[row]), int(plan.cv[row]), epoch))
                 if got is None:
                     miss.append(row)
                 else:
@@ -400,10 +490,12 @@ class ServingService:
             lanes[k] = np.asarray(miss, dtype=np.intp)
         return plan._replace(lanes=tuple(lanes)), hits
 
-    def cache_put(self, key: tuple[int, int], value: tuple[int, np.ndarray]) -> None:
+    def cache_put(self, key: tuple[int, int, int],
+                  value: tuple[int, np.ndarray]) -> None:
         """Insert a computed result through the cache *admission* policy
         (the one insertion path — the streaming scheduler routes through
-        it too, so admission policy cannot drift between entry points)."""
+        it too, so admission policy cannot drift between entry points).
+        ``key`` is the epoched cache key ``(u, v, epoch)``."""
         if self.cache is None:
             return
         if self._seen_once is not None and key not in self.cache \
@@ -418,8 +510,9 @@ class ServingService:
 
     def _cache_put(self, plan: QueryPlan, row: int, dist: int,
                    eids: np.ndarray) -> None:
-        self.cache_put((int(plan.cu[row]), int(plan.cv[row])),
-                       (int(dist), eids))
+        self.cache_put(
+            (int(plan.cu[row]), int(plan.cv[row]), self.index.epoch),
+            (int(dist), eids))
 
     # -- answers -------------------------------------------------------------
 

@@ -39,6 +39,17 @@ deadline-bounded scheduler:
   filled as chunks drain through ``ServingService.cache_put`` — which
   applies the cache *admission* policy (``cache_admission="reuse"``:
   don't insert predicted one-shot cold pairs).
+* **Edge updates / epochs** (DESIGN.md §13).  ``submit_update`` applies
+  an edge insert/delete batch: the next epoch's index is computed by
+  incremental label maintenance (``QbSIndex.apply_update``) and swapped
+  in under the scheduler lock (``install_index`` — the hook the replica
+  tier fans a precomputed epoch out through).  Admission pins the epoch:
+  every dispatched chunk records the epoch it was admitted under and its
+  futures resolve from that epoch's tables (``_flight`` is keyed by
+  ``(pair, epoch)``), a submission only *joins* in-flight work of the
+  current epoch (an older epoch's flight is stale for it — it goes
+  pending and recomputes), and cache keys carry the epoch end-to-end, so
+  a stale SPG can never be served.
 
 Dispatch reuses the service's lane machinery (``_chunks``) and its
 double-buffered window across admissions.  ``ServingService.query_batch``
@@ -139,9 +150,11 @@ class QueryFuture:
     is answered (shared by every duplicate submission of that pair).
     ``qos`` records the class this submission rode in under and
     ``t_submit`` its submit instant on the injected clock — the anchor
-    the per-class latency histogram measures resolution against."""
+    the per-class latency histogram measures resolution against.
+    ``epoch`` is stamped at resolution with the graph epoch the answer
+    was computed under (DESIGN.md §13) — ``None`` while unresolved."""
 
-    __slots__ = ("u", "v", "qos", "t_submit", "_stream", "_result")
+    __slots__ = ("u", "v", "qos", "t_submit", "epoch", "_stream", "_result")
 
     def __init__(self, u: int, v: int, stream: "StreamingService",
                  qos: str = "default", t_submit: float = 0.0):
@@ -149,6 +162,7 @@ class QueryFuture:
         self.v = int(v)
         self.qos = qos
         self.t_submit = float(t_submit)
+        self.epoch: int | None = None
         self._stream = stream
         self._result = None
 
@@ -191,7 +205,7 @@ class StreamingService:
 
     _QBS_GUARDED_FIELDS = (
         "_queues", "_cls_backlog", "_deficit", "_pending", "_n_pending",
-        "_deadline", "_heap", "_waiting", "_inflight", "_timer",
+        "_deadline", "_heap", "_waiting", "_flight", "_inflight", "_timer",
         "_timer_token", "_armed_for", "_chunk", "stats", "qos_stats",
         "admission_log", "lat_hist",
     )
@@ -244,11 +258,19 @@ class StreamingService:
         self._armed_for: float | None = None
         # serializes submit/drain/poll against clock-thread deadline fires
         self._lock = san.lock if san is not None else threading.RLock()
-        # canonical key -> [QueryFuture, ...]; present iff pending/in-flight
+        # canonical key -> [QueryFuture, ...]; present iff *pending* (not
+        # yet admitted) — admission moves the list into _flight under the
+        # epoch it dispatched at
         self._waiting: dict[tuple[int, int], list[QueryFuture]] = \
             box.dict(what="StreamingService._waiting")
+        # canonical key -> {admission epoch -> [QueryFuture, ...]} while
+        # in flight: an update can land between two admissions of the
+        # same pair, so one key can legitimately be in flight under two
+        # epochs at once, each resolving against its own tables (§13)
+        self._flight: dict[tuple[int, int], dict[int, list[QueryFuture]]] = \
+            box.dict(what="StreamingService._flight")
         self._inflight: deque = box.deque(
-            what="StreamingService._inflight")   # (plan, sel, live, dev out)
+            what="StreamingService._inflight")  # (plan, sel, live, epoch, out)
         self.stats = box.dict({
             "submitted": 0,        # queries accepted
             "trivial": 0,          # resolved at submit (u == v)
@@ -262,6 +284,7 @@ class StreamingService:
             "deadline_flushes": 0,  # flushes containing an expired pair
             "handed_off": 0,       # pending pairs exported to a peer
                                    # replica (handoff_pending)
+            "updates": 0,          # epoch advances installed (§13)
         }, what="StreamingService.stats")
         # waits are wall-clock (injected-clock) seconds from submit to
         # admission — the queueing latency the deadline bounds; bounded
@@ -349,6 +372,10 @@ class StreamingService:
             now = self.clock.now()
             deadline = None if cls.max_wait is None else now + cls.max_wait
             cache = self.service.cache
+            # the epoch this submission answers for: joins, cache lookups
+            # and fresh pendings all pin to it (it can only advance under
+            # this lock, so one read covers the whole batch)
+            ep = self.index.epoch
             futs = []
             for u, v in zip(us.tolist(), vs.tolist()):
                 fut = QueryFuture(u, v, self, qos=cls.name, t_submit=now)
@@ -356,6 +383,7 @@ class StreamingService:
                 self.stats["submitted"] += 1
                 cstat["submitted"] += 1
                 if u == v:
+                    fut.epoch = ep
                     fut._resolve(0, _NO_EDGES, INF)
                     self.lat_hist[cls.name].observe(0.0)
                     self.stats["trivial"] += 1
@@ -367,6 +395,14 @@ class StreamingService:
                     continue
                 key = (min(u, v), max(u, v))
                 waiters = self._waiting.get(key)
+                if waiters is None:
+                    # in flight *at this epoch*: its pending result is
+                    # exactly what this submission would compute — join.
+                    # An older epoch's flight is stale for us: fall
+                    # through and go pending (recompute at ep).
+                    flight = self._flight.get(key)
+                    if flight is not None:
+                        waiters = flight.get(ep)
                 if waiters is not None:      # pending or in flight: join it
                     waiters.append(fut)
                     self.stats["joined"] += 1
@@ -381,9 +417,10 @@ class StreamingService:
                                        (deadline, next(self._seq), key))
                     continue
                 if cache is not None:
-                    got = cache.get(key)
+                    got = cache.get((key[0], key[1], ep))
                     if got is not None:
                         lane = self._lane_of(key)
+                        fut.epoch = ep
                         fut._resolve(got[0], got[1],
                                      d_top_of(lane, got[0], INF))
                         self.lat_hist[cls.name].observe(0.0)
@@ -397,7 +434,10 @@ class StreamingService:
                 self._queues[ci].append((key, seq))
                 self._cls_backlog[ci] += 1
                 self._n_pending += 1
-                if deadline is not None:
+                if deadline is not None and \
+                        deadline < self._deadline.get(key, math.inf):
+                    # min-merge, not overwrite: the same key may still be
+                    # in flight under an older epoch with a tighter bound
                     self._deadline[key] = deadline
                     heapq.heappush(self._heap, (deadline, seq, key))
             self._pump()
@@ -484,11 +524,16 @@ class StreamingService:
             ci = self._cls_index[qos]
             cstat = self.qos_stats[qos]
             now = self.clock.now()
+            ep = self.index.epoch
             for fut in futures:
                 fut._stream = self
             self.stats["submitted"] += len(futures)
             cstat["submitted"] += len(futures)
             waiters = self._waiting.get(key)
+            if waiters is None:
+                flight = self._flight.get(key)
+                if flight is not None:         # current-epoch flight only
+                    waiters = flight.get(ep)
             if waiters is not None:            # pending/in flight here: join
                 waiters.extend(futures)
                 self.stats["joined"] += len(futures)
@@ -500,11 +545,13 @@ class StreamingService:
                                    (deadline, next(self._seq), key))
             else:
                 cache = self.service.cache
-                got = cache.get(key) if cache is not None else None
+                got = (cache.get((key[0], key[1], ep))
+                       if cache is not None else None)
                 if got is not None:
                     lane = self._lane_of(key)
                     d_top = d_top_of(lane, got[0], INF)
                     for fut in futures:
+                        fut.epoch = ep
                         fut._resolve(got[0], got[1], d_top)
                         self.lat_hist[fut.qos].observe(
                             (now - fut.t_submit) * 1e6)
@@ -522,11 +569,61 @@ class StreamingService:
                 # one creator per fresh pair, like submit_batch duplicates
                 self.stats["joined"] += len(futures) - 1
                 cstat["joined"] += len(futures) - 1
-                if deadline is not None:
+                if deadline is not None and \
+                        deadline < self._deadline.get(key, math.inf):
                     self._deadline[key] = deadline
                     heapq.heappush(self._heap, (deadline, seq, key))
             self._pump()
             self._arm_timer()
+
+    def export_cache(self, pred=None, *, remove: bool = False) -> list:
+        """Export packed result-cache entries under the scheduler lock
+        (``ResultCache.export_packed``): the router's warm-handoff hook,
+        so cache residency moves with key ownership on drain/restore
+        instead of re-warming from cold.  ``pred`` filters on the full
+        epoched key; ``remove=True`` makes it a move."""
+        with self._lock:
+            cache = self.service.cache
+            if cache is None:
+                return []
+            return cache.export_packed(pred, remove=remove)
+
+    def import_cache(self, entries) -> None:
+        """Absorb packed cache entries exported by a peer replica."""
+        with self._lock:
+            cache = self.service.cache
+            if cache is not None:
+                cache.import_packed(entries)
+
+    # -- dynamic updates (DESIGN.md §13) -------------------------------------
+
+    def submit_update(self, inserts=None, deletes=None, *,
+                      churn_threshold: float = 0.5):
+        """Apply one edge insert/delete batch to the served graph and
+        advance the epoch.  The next epoch's index is computed *outside*
+        the scheduler lock (incremental label maintenance —
+        ``QbSIndex.apply_update`` — can take many milliseconds; serving
+        keeps running on the current epoch meanwhile), then swapped in
+        atomically via ``install_index``.  Returns the new index.
+
+        Consistency: chunks already dispatched resolve under their
+        admission epoch (their device programs hold the old tables);
+        pairs still pending admit under the new epoch at their next
+        flush; the caches never cross epochs (keys carry the epoch)."""
+        new = self.index.apply_update(inserts=inserts, deletes=deletes,
+                                      churn_threshold=churn_threshold)
+        self.install_index(new)
+        return new
+
+    def install_index(self, index) -> None:
+        """Install a pre-computed next-epoch index under the scheduler
+        lock — the fan-out hook ``ReplicaRouter.apply_update`` uses to
+        advance every replica to the *same* index without computing the
+        update batch N times."""
+        with self._lock:
+            self.service.install_index(index)
+            self.index = index
+            self.stats["updates"] += 1
 
     def close(self) -> None:
         """Drain outstanding work and disarm the deadline timer, so no
@@ -620,7 +717,7 @@ class StreamingService:
                                         -float(self._chunk))
                 self.qos_stats[self._classes[ci].name]["expired"] += 1
                 expired.append((key, ci, t_enq))
-            elif key in self._waiting:
+            elif key in self._flight:
                 expired_inflight = True           # joined an in-flight pair
         return expired, expired_inflight
 
@@ -720,9 +817,19 @@ class StreamingService:
         batch through the service's lane machinery at the current chunk
         width, keeping at most ``async_depth`` chunks un-synced in
         flight.  Row order is round order, so the weighted schedule
-        decides intra-lane dispatch (and thus resolution) order."""
+        decides intra-lane dispatch (and thus resolution) order.
+
+        Epoch pinning (§13): every key admitted here moves from
+        ``_waiting`` into ``_flight[key][epoch]`` and every dispatched
+        chunk records the epoch — the device programs capture the
+        current index's tables at dispatch, and an ``install_index``
+        racing this flush is excluded by the scheduler lock, so chunk
+        results and the recorded epoch can never disagree."""
         svc = self.service
+        ep = self.index.epoch
         batch = [entry for b, _ in rounds for entry in b]
+        for key, _, _ in batch:
+            self._flight.setdefault(key, {})[ep] = self._waiting.pop(key)
         cu = np.fromiter((k[0][0] for k in batch), np.int32, len(batch))
         cv = np.fromiter((k[0][1] for k in batch), np.int32, len(batch))
         cls = np.fromiter((k[1] for k in batch), np.int16, len(batch))
@@ -741,7 +848,7 @@ class StreamingService:
         for k in range(1, N_LANES):
             svc.lane_served[k] += int(plan.lanes[k].size)
         for sel, live, dispatch in svc._chunks(plan, chunk=self._chunk):
-            self._inflight.append((plan, sel, live, dispatch()))
+            self._inflight.append((plan, sel, live, ep, dispatch()))
             self.stats["chunks"] += 1
             self.stats["padded_rows"] += sel.shape[0] - live
             self._sync_until(svc.async_depth - 1)
@@ -786,7 +893,7 @@ class StreamingService:
     def _sync_until(self, limit: int) -> None:  # qbslint: locked
         now = self.clock.now()
         while len(self._inflight) > limit:
-            plan, sel, live, out = self._inflight.popleft()
+            plan, sel, live, ep, out = self._inflight.popleft()
             d, m = jax.device_get(out)
             for k in range(live):
                 row = int(sel[k])
@@ -795,14 +902,22 @@ class StreamingService:
                 eids.flags.writeable = False   # shared: waiters + cache
                 dist = int(d[k])
                 d_top = d_top_of(int(plan.lane[row]), dist, INF)
-                for fut in self._waiting.pop(key):
+                flight = self._flight[key]
+                for fut in flight.pop(ep):
+                    fut.epoch = ep
                     fut._resolve(dist, eids, d_top)
                     # resolution-time latency on the injected clock: under
                     # ManualClock this is a pure function of the trace
                     self.lat_hist[fut.qos].observe(
                         (now - fut.t_submit) * 1e6)
-                self._deadline.pop(key, None)
-                self.service.cache_put(key, (dist, eids))
+                if not flight:
+                    del self._flight[key]
+                if key not in self._waiting and key not in self._flight:
+                    # the pair may have been re-submitted (pending at a
+                    # newer epoch) or still be in flight under another
+                    # epoch — its deadline must survive this resolution
+                    self._deadline.pop(key, None)
+                self.service.cache_put((key[0], key[1], ep), (dist, eids))
 
     def _lane_of(self, key: tuple[int, int]) -> int:
         """Scalar lane classification for submit-time (cache-hit)

@@ -1,0 +1,20 @@
+"""Seeded QBS009 violations: Graph/label-table/index writes outside the
+construction and epoch-advance entry points."""
+
+
+class Service:
+    def __init__(self, index):
+        self.index = index                   # construction: allowed
+
+    def hot_swap(self, new):
+        self.index = new                     # rebind outside entry point
+
+    def patch_tables(self, d):
+        self.index.graph = d                 # nested receiver still fires
+        self.packed.label_dist[0] = 7        # in-place write into a table
+        self.scheme, keep = d, 1             # tuple target
+        del self.labels                      # delete is a write too
+
+
+def mutate(idx, rows):
+    idx.lm_dist = rows                       # free function, any receiver

@@ -91,6 +91,79 @@ class OracleCache:
         assert np.array_equal(np.asarray(res.edge_ids), eids), (res.u, res.v)
 
 
+class EpochOracle:
+    """Per-epoch oracle over a dynamic graph (DESIGN.md §13).
+
+    One ``Graph`` snapshot per epoch, plus an *independently* maintained
+    canonical edge set per epoch: ``advance`` re-derives the post-update
+    edge set with plain set algebra (self-loops dropped, phantom
+    inserts/deletes are no-ops, an insert wins a same-batch tie — the
+    documented ``apply_update`` semantics) and asserts the system's
+    epoch graph matches it exactly, so the graph-mutation layer is
+    checked against the oracle too, not trusted.  Queries then answer by
+    memoized numpy BFS (``oracle_spg``) on the epoch's snapshot — the
+    snapshot is what fixes edge-slot numbering, which the bit-identity
+    contract on ``edge_ids`` is stated in."""
+
+    def __init__(self, graph):
+        self._graphs = [graph]
+        self._edges = [self._pairs(graph)]
+        self._memo: dict[tuple[int, int, int], tuple[int, np.ndarray]] = {}
+
+    @staticmethod
+    def _pairs(graph) -> frozenset:
+        src = np.asarray(graph.src)
+        dst = np.asarray(graph.dst)
+        m = src < dst                      # one canonical slot per edge
+        return frozenset(zip(src[m].tolist(), dst[m].tolist()))
+
+    @staticmethod
+    def _canon(pairs) -> set:
+        return {(min(int(a), int(b)), max(int(a), int(b)))
+                for a, b in (pairs or []) if int(a) != int(b)}
+
+    @property
+    def epoch(self) -> int:
+        return len(self._graphs) - 1
+
+    def at(self, epoch: int):
+        """The ``Graph`` snapshot serving that epoch."""
+        return self._graphs[epoch]
+
+    def advance(self, graph_new, inserts=None, deletes=None) -> int:
+        """Register the next epoch's graph, asserting it equals the
+        oracle's own edge algebra for the update batch.  Returns the new
+        epoch number."""
+        ins = self._canon(inserts)
+        dels = self._canon(deletes)
+        want = (self._edges[-1] | ins) - (dels - ins)   # inserts win ties
+        got = self._pairs(graph_new)
+        assert got == want, (
+            f"epoch {self.epoch + 1} graph disagrees with the oracle edge "
+            f"algebra: extra={sorted(got - want)} missing={sorted(want - got)}")
+        self._graphs.append(graph_new)
+        self._edges.append(frozenset(want))
+        return self.epoch
+
+    def spg(self, u: int, v: int, epoch: int) -> tuple[int, np.ndarray]:
+        key = (min(u, v), max(u, v), epoch)
+        got = self._memo.get(key)
+        if got is None:
+            got = self._memo[key] = oracle_spg(self._graphs[epoch], u, v)
+        return got
+
+    def assert_future(self, fut) -> None:
+        """One resolved ``QueryFuture`` vs the oracle *at the epoch the
+        future resolved under* — the §13 pinning contract."""
+        assert fut.done(), (fut.u, fut.v)
+        assert fut.epoch is not None, (fut.u, fut.v)
+        res = fut.result()
+        d, eids = self.spg(res.u, res.v, fut.epoch)
+        assert res.dist == d, (res.u, res.v, fut.epoch, res.dist, d)
+        assert np.array_equal(np.asarray(res.edge_ids), eids), \
+            (res.u, res.v, fut.epoch)
+
+
 def assert_bit_identical(graph, results, us, vs) -> None:
     """Assert a list of SPGResults matches the oracle bit-for-bit on
     (u, v, dist, edge_ids)."""

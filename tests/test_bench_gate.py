@@ -41,11 +41,11 @@ def _rec(qps: float, us: float, *, bench="b", scale=0.25, ts=1.0,
 def test_pass_on_identical_and_improved(tmp_path):
     base = _write(tmp_path / "base.json", [_rec(100.0, 50.0)])
     same = bench_gate.load_latest(base)
-    regs, notes = bench_gate.compare(same, same, 0.25)
+    regs, notes, _ = bench_gate.compare(same, same, 0.25)
     assert regs == [] and notes == []
     cur = bench_gate.load_latest(
         _write(tmp_path / "cur.json", [_rec(180.0, 20.0)]))  # improvement
-    regs, _ = bench_gate.compare(same, cur, 0.25)
+    regs, _, _ = bench_gate.compare(same, cur, 0.25)
     assert regs == []
 
 
@@ -54,7 +54,7 @@ def test_fails_on_qps_regression_beyond_threshold(tmp_path):
         _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
     cur = bench_gate.load_latest(
         _write(tmp_path / "cur.json", [_rec(70.0, 50.0)]))   # -30% qps
-    regs, _ = bench_gate.compare(base, cur, 0.25)
+    regs, _, _ = bench_gate.compare(base, cur, 0.25)
     assert len(regs) == 1
     assert regs[0]["metric"] == "qps"
     assert regs[0]["ratio"] == pytest.approx(0.7)
@@ -69,7 +69,7 @@ def test_fails_on_latency_regression(tmp_path):
         _write(tmp_path / "base.json", [_rec(100.0, 50.0)]))
     cur = bench_gate.load_latest(
         _write(tmp_path / "cur.json", [_rec(100.0, 80.0)]))  # +60% latency
-    regs, _ = bench_gate.compare(base, cur, 0.25)
+    regs, _, _ = bench_gate.compare(base, cur, 0.25)
     assert [r["metric"] for r in regs] == ["us_per_query"]
 
 
@@ -84,7 +84,7 @@ def test_row_matching_is_structural_not_positional(tmp_path):
     cur_rec["rows"] = [dict(extra, qps=100.0),
                        dict(cur_rec["rows"][0], speedup_vs_sync=9.9)]
     cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
-    regs, _ = bench_gate.compare(base, cur, 0.25)
+    regs, _, _ = bench_gate.compare(base, cur, 0.25)
     assert len(regs) == 1
     assert regs[0]["row"]["mix"] == "skewed"
     assert regs[0]["metric"] == "qps"
@@ -97,9 +97,65 @@ def test_missing_counterparts_skip_with_note(tmp_path):
     ]))
     cur = bench_gate.load_latest(
         _write(tmp_path / "cur.json", [_rec(100.0, 50.0)]))
-    regs, notes = bench_gate.compare(base, cur, 0.25)
+    regs, notes, _ = bench_gate.compare(base, cur, 0.25)
     assert regs == []
     assert any("nightly_only" in n for n in notes)
+
+
+def test_structurally_unmatched_rows_retire_not_fail(tmp_path):
+    """A baseline row whose key changed shape across PRs (renamed field,
+    different identifying value) is *retired*: reported in the third
+    return, never a regression — while surviving rows still gate."""
+    old_shape = {"mix": "skewed", "service": "cached", "qps": 500.0,
+                 "us_per_query": 2000.0}
+    base = bench_gate.load_latest(_write(
+        tmp_path / "base.json", [_rec(100.0, 50.0, extra_rows=[old_shape])]))
+    # current renamed the row's identifying field AND regressed the real row
+    cur_rec = _rec(40.0, 50.0)
+    cur_rec["rows"].append({"mix": "skewed-v2", "service": "cached",
+                            "qps": 500.0, "us_per_query": 2000.0})
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, notes, retired = bench_gate.compare(base, cur, 0.25)
+    assert [r["row"].get("mix") for r in regs] == ["uniform"]   # real red
+    assert [r["row"].get("mix") for r in retired] == ["skewed"]
+    assert not any("skewed" in n for n in notes)   # retired, not noted
+    # CLI: retired rows alone never fail the gate
+    base_p = _write(tmp_path / "b2.json",
+                    [_rec(100.0, 50.0, extra_rows=[old_shape])])
+    cur_p = _write(tmp_path / "c2.json", [_rec(100.0, 50.0)])
+    assert bench_gate.main(["--baseline", str(base_p),
+                            "--current", str(cur_p)]) == 0
+
+
+def _speedup_rec(speedup: float, *, ts=1.0) -> dict:
+    return {"bench": "graph_updates", "ts": ts, "scale": 0.25, "rows": [
+        {"graph": "ba-hub", "V": 12000, "R": 64, "op": "speedup",
+         "update_speedup": speedup, "affected_med": 6.0},
+    ]}
+
+
+def test_update_speedup_rows_gate_on_absolute_floor(tmp_path):
+    base = bench_gate.load_latest(
+        _write(tmp_path / "base.json", [_speedup_rec(6.5)]))
+    # halving that stays above the floor passes — the rule is absolute
+    ok = bench_gate.load_latest(
+        _write(tmp_path / "ok.json", [_speedup_rec(5.2)]))
+    regs, _, _ = bench_gate.compare(base, ok, 0.25, update_speedup_floor=5.0)
+    assert regs == []
+    # dropping below the floor fails regardless of the baseline value
+    bad = bench_gate.load_latest(
+        _write(tmp_path / "bad.json", [_speedup_rec(3.8)]))
+    regs, _, _ = bench_gate.compare(base, bad, 0.25, update_speedup_floor=5.0)
+    assert [r["metric"] for r in regs] == ["update_speedup"]
+    assert regs[0]["current"] == pytest.approx(3.8)
+    assert regs[0]["baseline"] == pytest.approx(5.0)
+    # update_speedup/affected_med are floats (out of the row key) and the
+    # row carries no tracked metric: only the floor rule can fire on it
+    cur_rec = _speedup_rec(6.5)
+    cur_rec["rows"][0]["affected_med"] = 999.0
+    cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
+    regs, _, _ = bench_gate.compare(base, cur, 0.25, update_speedup_floor=5.0)
+    assert regs == []
 
 
 def test_noise_floor_skips_microsecond_rows(tmp_path):
@@ -112,7 +168,7 @@ def test_noise_floor_skips_microsecond_rows(tmp_path):
     cur_rec = _rec(40.0, 50.0)                       # real row regressed
     cur_rec["rows"].append(dict(hot, qps=60000.0))   # hot row halved too
     cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
-    regs, notes = bench_gate.compare(base, cur, 0.25, min_us=50.0)
+    regs, notes, _ = bench_gate.compare(base, cur, 0.25, min_us=50.0)
     assert [r["row"].get("mix") for r in regs] == ["uniform"]
     assert any("noise floor" in n for n in notes)
 
@@ -159,12 +215,12 @@ def test_roofline_rows_gate_on_absolute_floor_not_relative(tmp_path):
     # absolute, unlike the qps percentage rule
     ok = bench_gate.load_latest(
         _write(tmp_path / "ok.json", [_roofline_rec(0.06)]))
-    regs, _ = bench_gate.compare(base, ok, 0.25, frac_floor=0.01)
+    regs, _, _ = bench_gate.compare(base, ok, 0.25, frac_floor=0.01)
     assert regs == []
     # a collapse below the floor fails regardless of the baseline value
     bad = bench_gate.load_latest(
         _write(tmp_path / "bad.json", [_roofline_rec(0.004)]))
-    regs, _ = bench_gate.compare(base, bad, 0.25, frac_floor=0.01)
+    regs, _, _ = bench_gate.compare(base, bad, 0.25, frac_floor=0.01)
     assert [r["metric"] for r in regs] == ["roofline_frac"]
     assert regs[0]["current"] == pytest.approx(0.004)
 
@@ -177,7 +233,7 @@ def test_roofline_rows_never_hit_tracked_metric_rule(tmp_path):
     cur_rec = _roofline_rec(0.5)
     cur_rec["rows"][0]["wall_us"] = 90000.0     # 100x slower wall clock
     cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
-    regs, _ = bench_gate.compare(base, cur, 0.25, frac_floor=0.01)
+    regs, _, _ = bench_gate.compare(base, cur, 0.25, frac_floor=0.01)
     assert regs == []
 
 
@@ -195,12 +251,12 @@ def test_sharded_rows_gate_on_absolute_ceiling(tmp_path):
     # relative to the baseline value)
     ok = bench_gate.load_latest(
         _write(tmp_path / "ok.json", [_shard_rec(0.24)]))
-    regs, _ = bench_gate.compare(base, ok, 0.25, shard_frac_ceiling=0.25)
+    regs, _, _ = bench_gate.compare(base, ok, 0.25, shard_frac_ceiling=0.25)
     assert regs == []
     # climbing above the ceiling fails: sharding stopped scaling linearly
     bad = bench_gate.load_latest(
         _write(tmp_path / "bad.json", [_shard_rec(0.31)]))
-    regs, _ = bench_gate.compare(base, bad, 0.25, shard_frac_ceiling=0.25)
+    regs, _, _ = bench_gate.compare(base, bad, 0.25, shard_frac_ceiling=0.25)
     assert [r["metric"] for r in regs] == ["per_device_frac"]
     assert regs[0]["current"] == pytest.approx(0.31)
     # byte columns are floats (out of the key) and untracked: the ceiling
@@ -208,7 +264,7 @@ def test_sharded_rows_gate_on_absolute_ceiling(tmp_path):
     cur_rec = _shard_rec(0.19)
     cur_rec["rows"][0]["per_device_bytes"] = 9.9e9
     cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
-    regs, _ = bench_gate.compare(base, cur, 0.25, shard_frac_ceiling=0.25)
+    regs, _, _ = bench_gate.compare(base, cur, 0.25, shard_frac_ceiling=0.25)
     assert regs == []
 
 
@@ -242,12 +298,12 @@ def test_p99_rows_gate_on_absolute_per_class_ceiling(tmp_path):
     # absolute (deterministic simulated time has no noise to tolerate)
     ok = bench_gate.load_latest(
         _write(tmp_path / "ok.json", [_p99_rec(2048.0, 65536.0)]))
-    regs, _ = bench_gate.compare(base, ok, 0.25, p99_ceiling_us=ceilings)
+    regs, _, _ = bench_gate.compare(base, ok, 0.25, p99_ceiling_us=ceilings)
     assert regs == []
     # one bucket above its class ceiling fails, naming the class's row
     bad = bench_gate.load_latest(
         _write(tmp_path / "bad.json", [_p99_rec(4096.0, 65536.0)]))
-    regs, _ = bench_gate.compare(base, bad, 0.25, p99_ceiling_us=ceilings)
+    regs, _, _ = bench_gate.compare(base, bad, 0.25, p99_ceiling_us=ceilings)
     assert [r["metric"] for r in regs] == ["p99_us"]
     assert regs[0]["row"]["qos"] == "interactive"
     assert regs[0]["baseline"] == pytest.approx(2048.0)
@@ -257,7 +313,7 @@ def test_p99_rows_gate_on_absolute_per_class_ceiling(tmp_path):
     odd["rows"][0]["qos"] = "background"
     odd["rows"][0]["p99_us"] = 150_000.0
     base2 = bench_gate.load_latest(_write(tmp_path / "b2.json", [odd]))
-    regs, _ = bench_gate.compare(base2, base2, 0.25, p99_ceiling_us=ceilings)
+    regs, _, _ = bench_gate.compare(base2, base2, 0.25, p99_ceiling_us=ceilings)
     assert regs == []
 
 
@@ -269,7 +325,7 @@ def test_p50_rides_along_untracked(tmp_path):
     cur_rec = _p99_rec(1024.0, 32768.0)
     cur_rec["rows"][0]["p50_us"] = 1e9           # absurd, but untracked
     cur = bench_gate.load_latest(_write(tmp_path / "cur.json", [cur_rec]))
-    regs, _ = bench_gate.compare(
+    regs, _, _ = bench_gate.compare(
         base, cur, 0.25,
         p99_ceiling_us={"*": 200_000.0, "interactive": 2048.0})
     assert regs == []

@@ -35,7 +35,7 @@ import os
 import numpy as np
 import pytest
 
-from helpers.serving_oracle import OracleCache
+from helpers.serving_oracle import EpochOracle, OracleCache
 
 from repro.core import QbSIndex, from_edges
 from repro.serving import (
@@ -80,7 +80,7 @@ DTS = (0.0, 0.005, 0.02, 0.1, 0.6)
 
 
 @functools.lru_cache(maxsize=None)
-def _built(graph_seed: int):
+def _built(graph_seed: int, backend: str = "segment"):
     """(graph, index) for one fuzz graph seed — memoized because the
     index build (and its per-index jit cache) dominates example cost."""
     rng = np.random.default_rng(1000 + graph_seed)
@@ -91,7 +91,8 @@ def _built(graph_seed: int):
     deg = np.asarray(g.degrees())[:n]
     nl = int(rng.integers(1, 5))
     landmarks = np.sort(np.argsort(-deg)[:nl]).astype(np.int32)
-    return g, n, QbSIndex.build(g, landmarks=landmarks, chunk=4)
+    return g, n, QbSIndex.build(g, landmarks=landmarks, chunk=4,
+                                backend=backend)
 
 
 def _run_trace(seed: int, n_ops: int = 24) -> None:
@@ -145,6 +146,7 @@ def _run_trace(seed: int, n_ops: int = 24) -> None:
     # future resolution: everything resolved, nothing left anywhere
     assert st.n_pending == 0 and st.n_inflight == 0
     assert not st._waiting and not st._pending and not st._deadline
+    assert not st._flight
     assert all(f.done() for f in futs)
 
     # bit-identity vs the numpy oracle, every future, original orientation
@@ -199,6 +201,110 @@ def _run_trace(seed: int, n_ops: int = 24) -> None:
 @pytest.mark.parametrize("seed", range(56 * _SCALE))
 def test_streaming_trace_properties(seed):
     _run_trace(seed)
+
+
+# -- dynamic-update fuzz: interleaved update+query traces (§13) --------------
+
+
+def _run_update_trace(seed: int, n_ops: int = 22) -> None:
+    """One dynamic-graph fuzz example: the streaming trace space plus
+    random mid-trace edge-update batches (``submit_update`` — inserts,
+    deletes, mixed, phantom-heavy; churn thresholds drawn so both the
+    incremental and full-rebuild branches serve), on a drawn relay
+    backend.  Every future is checked against the per-epoch-rebuild
+    numpy oracle *at the epoch it resolved under* — the §13 pinning
+    contract — and duplicates of one (pair, epoch) resolved identically.
+    """
+    rng = np.random.default_rng(50_000 + seed)
+    backend = ("segment", "csr", "hybrid")[int(rng.integers(3))]
+    g, n, idx = _built(int(rng.integers(N_GRAPH_SEEDS)), backend)
+    clk = ManualClock()
+    st = StreamingService(
+        idx, policy=POLICIES[int(rng.integers(len(POLICIES)))],
+        qos=QOS_CONFIGS[int(rng.integers(len(QOS_CONFIGS)))], clock=clk,
+        async_depth=int(rng.integers(1, 3)),
+        **CACHES[int(rng.integers(len(CACHES)))])
+    names = [c.name for c in st.qos_classes]
+    oracle = EpochOracle(g)
+
+    futs: list = []
+    recent: list[tuple[int, int]] = []
+
+    def draw_pair():
+        if recent and rng.random() < 0.35:
+            u, v = recent[int(rng.integers(len(recent)))]
+            return (v, u) if rng.random() < 0.5 else (u, v)
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        recent.append((u, v))
+        return u, v
+
+    def draw_update():
+        from repro.core.graph import edge_set
+        ins, dels = [], []
+        present = [tuple(int(x) for x in e) for e in edge_set(st.index.graph)]
+        for _ in range(int(rng.integers(1, 3))):
+            if rng.random() < 0.5 and present:
+                dels.append(present[int(rng.integers(len(present)))])
+            else:
+                a, b = int(rng.integers(n)), int(rng.integers(n))
+                if a != b:
+                    ins.append((a, b))       # may be present: phantom no-op
+        return ins, dels
+
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.35:
+            u, v = draw_pair()
+            futs.append(st.submit(u, v,
+                                  qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.50:
+            pairs = [draw_pair() for _ in range(int(rng.integers(2, 6)))]
+            futs.extend(st.submit_batch(
+                [p[0] for p in pairs], [p[1] for p in pairs],
+                qos=names[int(rng.integers(len(names)))]))
+        elif r < 0.65:                       # the update op
+            ins, dels = draw_update()
+            churn = (0.0, 0.6, 1.1)[int(rng.integers(3))]
+            new = st.submit_update(inserts=ins, deletes=dels,
+                                   churn_threshold=churn)
+            oracle.advance(new.graph, inserts=ins, deletes=dels)
+            assert st.index.epoch == oracle.epoch
+        elif r < 0.80:
+            clk.advance(DTS[int(rng.integers(len(DTS)))])
+        elif r < 0.88:
+            st.drain()
+        elif r < 0.95:
+            st.poll()
+        elif futs:
+            futs[int(rng.integers(len(futs)))].result()
+    st.drain()
+
+    assert st.n_pending == 0 and st.n_inflight == 0
+    assert not st._waiting and not st._pending and not st._flight
+    assert st.stats["updates"] == oracle.epoch
+
+    by_key: dict[tuple[int, int, int], list] = {}
+    for f in futs:
+        oracle.assert_future(f)              # per-epoch bit-identity
+        by_key.setdefault((min(f.u, f.v), max(f.u, f.v), f.epoch),
+                          []).append(f.result())
+    # duplicates of one (pair, epoch) resolved identically
+    for group in by_key.values():
+        for r in group[1:]:
+            assert r.dist == group[0].dist
+            assert np.array_equal(r.edge_ids, group[0].edge_ids)
+
+    # the accounting identity survives epoch churn
+    s = st.stats
+    assert s["admitted_pairs"] == (s["submitted"] - s["trivial"]
+                                   - s["cache_hits"] - s["joined"]
+                                   - s["handed_off"])
+    st.close()
+
+
+@pytest.mark.parametrize("seed", range(18 * _SCALE))
+def test_update_trace_properties(seed):
+    _run_update_trace(seed)
 
 
 # -- replica-tier fuzz: the same invariants through a ReplicaRouter ----------
@@ -269,7 +375,7 @@ def _run_router_trace(seed: int, n_ops: int = 24) -> None:
 
     for rep in router.replicas:
         assert rep.n_pending == 0 and rep.n_inflight == 0
-        assert not rep._waiting and not rep._pending
+        assert not rep._waiting and not rep._pending and not rep._flight
     assert all(f.done() for f in futs)
 
     oracle = OracleCache(g)

@@ -119,6 +119,29 @@ def test_qbs008_host_boundary_marker_exempts_def():
                                           ""))) == ["QBS008"]
 
 
+def test_qbs009_table_mutation_outside_epoch_entry_points():
+    findings = _lint(FIXTURES / "qbs009")
+    assert _rules(findings) == ["QBS009"]
+    # every finding sits in the bad fixture; the clean counterpart's
+    # entry-point writes (__init__/apply_update/install_index/build*) and
+    # its reasoned suppression stay silent
+    assert all(f.path.endswith("bad_mutation.py") for f in findings)
+    assert sorted(f.line for f in findings) == [10, 13, 14, 15, 16, 20]
+
+
+def test_qbs009_subscript_into_unversioned_state_is_fine():
+    src = (
+        "class S:\n"
+        "    def bump(self):\n"
+        "        self.stats['updates'] = 1\n"
+        "        self.flags.index = 3\n"
+    )
+    # writing *into* a non-table dict is fine; rebinding a '.index'
+    # attribute is not, whatever the receiver
+    assert _rules(lint_source("s.py", src)) == ["QBS009"]
+    assert [f.line for f in lint_source("s.py", src)] == [4]
+
+
 def test_qbs007_jit_bodies_are_exempt():
     src = (
         "import jax\n"
@@ -175,6 +198,7 @@ def test_repo_src_tree_is_clean():
         "qbs007_bad.py",
         "qbs007",
         "qbs008",
+        "qbs009",
     ],
 )
 def test_cli_nonzero_on_each_seeded_violation(fixture):
@@ -200,9 +224,9 @@ def test_cli_rule_filter_and_json_output():
     assert {f["rule"] for f in payload["findings"]} == {"QBS005"}
 
 
-def test_cli_list_rules_names_all_eight():
+def test_cli_list_rules_names_all_nine():
     proc = _cli("--list-rules")
     assert proc.returncode == 0
     for rule in ALL_RULES:
         assert rule.id in proc.stdout
-    assert len(ALL_RULES) == 8
+    assert len(ALL_RULES) == 9

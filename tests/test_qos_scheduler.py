@@ -255,12 +255,13 @@ def test_cache_admission_reuse_skips_one_shot_pairs(index):
     st = _stream(index, cache_size=16, cache_admission="reuse")
     cache = st.service.cache
     cold = (int(non[0]), int(non[1]))
+    # resident cache keys carry the serving epoch (0: no updates here)
     st.submit(*cold)
     st.drain()
-    assert cold not in cache                    # first sighting: refused
+    assert (*cold, 0) not in cache              # first sighting: refused
     st.submit(*cold)
     st.drain()
-    assert cold in cache                        # second compute: admitted
+    assert (*cold, 0) in cache                  # second compute: admitted
     before = st.stats["cache_hits"]
     st.submit(*cold)
     st.drain()
@@ -268,7 +269,7 @@ def test_cache_admission_reuse_skips_one_shot_pairs(index):
     hot = (int(lms[0]), int(non[2]))            # landmark endpoint
     st.submit(*hot)
     st.drain()
-    assert (min(hot), max(hot)) in cache        # hub skew: admitted at once
+    assert (min(hot), max(hot), 0) in cache     # hub skew: admitted at once
 
     with pytest.raises(ValueError):
         ServingService(index, cache_size=4, cache_admission="nope")
@@ -280,4 +281,4 @@ def test_cache_admission_all_is_seed_behavior(index):
     cold = (int(non[3]), int(non[4]))
     st.submit(*cold)
     st.drain()
-    assert cold in st.service.cache
+    assert (*cold, 0) in st.service.cache

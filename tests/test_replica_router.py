@@ -156,6 +156,8 @@ def test_hot_keys_cache_on_exactly_one_replica(index):
     rng = np.random.default_rng(3)
     hot = {(min(int(u), int(v)), max(int(u), int(v)))
            for u, v in rng.integers(0, 40, size=(12, 2)) if u != v}
+    # resident cache keys carry the serving epoch (0: no updates here)
+    hot_keys = [(u, v, 0) for u, v in hot]
     us = np.array([k[0] for k in hot], np.int32)
     vs = np.array([k[1] for k in hot], np.int32)
 
@@ -163,7 +165,7 @@ def test_hot_keys_cache_on_exactly_one_replica(index):
                               cache_size=256, cache_policy="hub")
     single.query_batch(us, vs)          # fills the cache
     single.query_batch(us, vs)          # pure cache hits
-    single_bytes = single.service.cache.bytes_for(hot)
+    single_bytes = single.service.cache.bytes_for(hot_keys)
     assert single_bytes > 0
 
     n = 4
@@ -171,11 +173,11 @@ def test_hot_keys_cache_on_exactly_one_replica(index):
                            policy=WIDE, cache_size=256, cache_policy="hub")
     router.query_batch(us, vs)
     router.query_batch(us, vs)
-    for key in hot:
+    for key in hot_keys:
         holders = [i for i, rep in enumerate(router.replicas)
                    if key in rep.service.cache]
-        assert holders == [router.owner_of(*key)]   # exactly the owner
-    summed = sum(rep.service.cache.bytes_for(hot)
+        assert holders == [router.owner_of(key[0], key[1])]  # the owner only
+    summed = sum(rep.service.cache.bytes_for(hot_keys)
                  for rep in router.replicas)
     assert summed == single_bytes                   # partitioned, not copied
     assert summed < n * single_bytes
@@ -310,6 +312,129 @@ def test_drain_guards_and_restore(index):
     assert {k: router.owner_of(*k) for k in baseline} == baseline
     assert router.stats["drains"] == 1 and router.stats["restores"] == 1
     router.close()
+
+
+def test_drain_and_restore_ship_warm_cache(index):
+    """Cache residency moves with ownership: draining a replica ships its
+    packed entries to the survivors (re-routed traffic keeps hitting),
+    and restoring it ships its keys back — a restored replica rejoins
+    *warm*, not cold (the bugfix this PR pins)."""
+    n = 3
+    router = ReplicaRouter(index, n_replicas=n, clocks=_clocks(n),
+                           policy=WIDE, cache_size=256, cache_policy="hub")
+    rng = np.random.default_rng(41)
+    hot = {(min(int(u), int(v)), max(int(u), int(v)))
+           for u, v in rng.integers(0, 40, size=(16, 2)) if u != v}
+    us = np.array([k[0] for k in hot], np.int32)
+    vs = np.array([k[1] for k in hot], np.int32)
+    router.query_batch(us, vs)              # warm every owner's cache
+    victim = max(range(n),
+                 key=lambda i: len(router.replicas[i].service.cache))
+    owned = [k for k in hot if router.owner_of(*k) == victim]
+    n_victim = len(router.replicas[victim].service.cache)
+    assert owned and n_victim > 0
+
+    router.drain_replica(victim)
+    assert len(router.replicas[victim].service.cache) == 0   # shipped out
+    assert router.stats["cache_shipped"] >= n_victim
+    hits0 = sum(rep.service.cache.hits for rep in router.replicas)
+    res = router.query_batch(us, vs)        # all pairs peer-served, warm
+    hits1 = sum(rep.service.cache.hits for rep in router.replicas)
+    assert hits1 - hits0 == len(hot)
+    oracle = OracleCache(index.graph)
+    for r in res:
+        oracle.assert_result(r)
+
+    shipped = router.stats["cache_shipped"]
+    router.restore_replica(victim)
+    back = router.replicas[victim].service.cache
+    assert all((u, v, 0) in back for u, v in owned)   # came home warm
+    assert router.stats["cache_shipped"] >= shipped + len(owned)
+    hits2 = sum(rep.service.cache.hits for rep in router.replicas)
+    router.query_batch(us, vs)
+    hits3 = sum(rep.service.cache.hits for rep in router.replicas)
+    assert hits3 - hits2 == len(hot)        # restored replica hits at once
+    router.close()
+
+
+def test_apply_update_fans_out_epochs(index):
+    """``apply_update`` computes the next-epoch index once and installs
+    the SAME object on every replica — draining ones included — under the
+    router lock; post-update traffic answers against the new graph."""
+    from repro.core.graph import edge_set
+
+    from helpers.serving_oracle import EpochOracle
+
+    router = ReplicaRouter(index, n_replicas=3, clocks=_clocks(3),
+                           policy=WIDE, cache_size=64)
+    oracle = EpochOracle(index.graph)
+    router.drain_replica(0)                 # drained replicas update too
+    cut = [tuple(int(x) for x in edge_set(index.graph)[0])]
+    new = router.apply_update(deletes=cut)
+    oracle.advance(new.graph, deletes=cut)
+    assert router.index is new and new.epoch == 1
+    assert router.stats["updates"] == 1
+    for rep in router.replicas:
+        assert rep.index is new and rep.service.index is new
+        assert rep.stats["updates"] == 1
+    rng = np.random.default_rng(43)
+    us, vs = _pairs(rng, 40, 8)
+    for r, u, v in zip(router.query_batch(us, vs),
+                       us.tolist(), vs.tolist()):
+        d, eids = oracle.spg(u, v, 1)
+        assert r.dist == d
+        assert np.array_equal(np.asarray(r.edge_ids), eids)
+    router.restore_replica(0)
+    router.close()
+
+
+# ------------------------------------------------------------- wall clock
+
+
+def test_system_clock_replica_trace_smoke(index):
+    """Wall-clock smoke: a short trace through a ``ReplicaRouter`` on
+    real ``SystemClock``s — real deadline timers, real threads — drains
+    clean with the exact accounting identity per replica, oracle
+    bit-identity per future, and metrics latency totals equal to the
+    resolved-query count (the simulated-time numbers validated against
+    reality)."""
+    import time
+
+    from repro.serving import MetricsRegistry
+
+    qos = (QoSClass("interactive", max_wait=0.01, weight=4.0),
+           QoSClass("bulk", max_wait=0.05, weight=1.0))
+    registry = MetricsRegistry()
+    with ReplicaRouter(index, n_replicas=2, policy=WIDE, qos=qos,
+                       cache_size=64) as router:   # clocks=None: SystemClock
+        for i, rep in enumerate(router.replicas):
+            registry.register(f"replica{i}", rep)
+        rng = np.random.default_rng(47)
+        futs = []
+        for step in range(4):
+            us, vs = _pairs(rng, 40, 5)
+            futs.extend(router.submit_batch(
+                us, vs, qos="interactive" if step % 2 else "bulk"))
+            if step == 1:
+                time.sleep(0.02)            # let real timers admit a round
+        router.drain()
+
+        oracle = OracleCache(index.graph)
+        for f in futs:
+            assert f.done()
+            oracle.assert_result(f.result())
+        for rep in router.replicas:
+            _accounting(rep)
+        snap = registry.snapshot()
+        assert set(snap) == {"replica0", "replica1"}
+        submitted = sum(s["stats"]["submitted"] for s in snap.values())
+        assert submitted == len(futs)
+        resolved_via_hist = sum(
+            sum(h["total"] for h in s["latency_us"].values())
+            for s in snap.values())
+        assert resolved_via_hist == len(futs)   # each future observed once
+        assert all(s["n_pending"] == 0 and s["n_inflight"] == 0
+                   for s in snap.values())
 
 
 def test_router_context_manager_and_single_replica(index):

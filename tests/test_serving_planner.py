@@ -273,6 +273,32 @@ def test_service_rounds_chunk_to_shard_multiple(index, monkeypatch):
     assert svc.chunk == 8
 
 
+def test_admission_chunk_rounding_warns_once_and_counts(index, monkeypatch):
+    """A misaligned *admitted* chunk override (the streaming layer's
+    adaptive ladder) warns once per service instance and increments
+    ``stats['chunk_roundings']`` on every rounding, so sustained
+    misaligned traffic is visible in metrics without per-admission
+    warning spam."""
+    import repro.core.distributed as distributed
+    monkeypatch.setattr(distributed, "make_serve_step",
+                        lambda *a, **kw: None)
+    mesh = SimpleNamespace(shape={"q": 4})
+    with warnings.catch_warnings():        # aligned construction: silent
+        warnings.simplefilter("error")
+        svc = ServingService(index, mesh=mesh, chunk=8)
+    assert svc.stats["chunk_roundings"] == 0
+    non = np.flatnonzero(~index._is_landmark_np)
+    plan = plan_queries(non[:3], non[3:6], index._is_landmark_np)
+    with pytest.warns(UserWarning, match="chunk_roundings"):
+        list(svc._chunks(plan, chunk=10))
+    assert svc.stats["chunk_roundings"] == 1
+    with warnings.catch_warnings():        # warned once; still counted
+        warnings.simplefilter("error")
+        list(svc._chunks(plan, chunk=6))
+        list(svc._chunks(plan, chunk=8))   # aligned: not a rounding
+    assert svc.stats["chunk_roundings"] == 2
+
+
 def test_onesided_roots_split(index):
     idx = index
     lms = np.asarray(idx.scheme.landmarks)

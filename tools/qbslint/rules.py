@@ -1,4 +1,4 @@
-"""The eight QbS repo-invariant rules (see DESIGN.md §9 for rationale).
+"""The nine QbS repo-invariant rules (see DESIGN.md §9 for rationale).
 
 Every rule is a pure function of one parsed module.  Shared machinery:
 ``_Aliases`` resolves local names through the file's imports (``import
@@ -660,7 +660,70 @@ class NoReplicatedGather(Rule):
                     "'# qbslint: host-boundary'")
 
 
+# ---------------------------------------------------------------------------
+# QBS009 — graph/label tables mutate only through epoch-advance entry points
+# ---------------------------------------------------------------------------
+
+
+class TableMutationOutsideEpoch(Rule):
+    id = "QBS009"
+    summary = ("write to a Graph/label-table/index attribute outside a "
+               "construction or epoch-advance entry point — dynamic "
+               "updates route through apply_update/install_index so every "
+               "table swap advances the epoch and in-flight chunks stay "
+               "pinnable to theirs (DESIGN.md §13)")
+    # the versioned state: rebinding any of these (or writing into one
+    # in place) changes what an index — or a service holding one —
+    # answers for, which only an epoch advance may do
+    _TABLES = {"graph", "scheme", "packed", "labels", "index",
+               "label_dist", "meta_w", "meta_dist", "lm_dist",
+               "_lm_dist", "_lm_dist_host", "src", "dst", "indptr"}
+    # construction plus the §13 epoch-advance entry points
+    _ALLOWED_NAMES = {"__init__", "__post_init__", "__new__",
+                      "apply_update", "submit_update", "install_index",
+                      "apply_edge_updates"}
+    _ALLOWED_PREFIXES = ("build", "_build", "make_", "_make_", "from_")
+
+    def _allowed(self, name: str) -> bool:
+        return name in self._ALLOWED_NAMES \
+            or name.startswith(self._ALLOWED_PREFIXES)
+
+    @staticmethod
+    def _strip(node: ast.AST) -> ast.AST:
+        while isinstance(node, ast.Subscript):
+            node = node.value
+        return node
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        yield from self._visit(mod, mod.tree, allowed=False)
+
+    def _visit(self, mod: Module, node: ast.AST,
+               allowed: bool) -> Iterable[Finding]:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            allowed = self._allowed(node.name)
+        elif not allowed and isinstance(
+                node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                       ast.Delete)):
+            targets = (node.targets if isinstance(node,
+                                                  (ast.Assign, ast.Delete))
+                       else [node.target])
+            for t in LockDiscipline._flat_targets(targets):
+                t = self._strip(t)
+                if isinstance(t, ast.Attribute) and t.attr in self._TABLES:
+                    how = ("delete of" if isinstance(node, ast.Delete)
+                           else "write to")
+                    yield self.finding(
+                        mod, t, f"{how} table attribute '.{t.attr}' "
+                        f"outside an epoch-advance entry point; build a "
+                        f"new index via apply_update and swap it in with "
+                        f"install_index so the epoch advances with the "
+                        f"tables")
+        for child in ast.iter_child_nodes(node):
+            yield from self._visit(mod, child, allowed)
+
+
 ALL_RULES = (ShardMapViaCompat(), WallClockInServing(), HostSyncInJit(),
              JitInHotPath(), LockDiscipline(), CacheInsertBypass(),
-             PackedWidenOnHost(), NoReplicatedGather())
+             PackedWidenOnHost(), NoReplicatedGather(),
+             TableMutationOutsideEpoch())
 RULES_BY_ID = {r.id: r for r in ALL_RULES}
